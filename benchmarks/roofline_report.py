@@ -1,0 +1,66 @@
+"""Section Roofline: aggregate the dry-run JSONs into the per-(arch x shape
+x mesh) three-term roofline table used by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+
+def load(results_dir: str = "results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_row(r) -> str:
+    mem = r.get("memory_per_device_adjusted") \
+        or r.get("memory_per_device_bytes") or 0
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_fraction']:.3f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {mem / 2**30:.1f} | {'Y' if r.get('hbm_ok') else 'N'} |")
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| dominant | useful_frac | roofline_frac | HBM GiB | fits |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def run(csv_rows: list, verbose: bool = True,
+        results_dir: str = "results/dryrun"):
+    t0 = time.time()
+    rows = load(results_dir)
+    if verbose:
+        if not rows:
+            print("  (no dry-run results found — run "
+                  "`python -m repro.launch.dryrun` first)")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                             r["mesh"])):
+            if r["mesh"] == "single":
+                print(f"  {r['arch']:>28} {r['shape']:>12} "
+                      f"dom={r['dominant']:<10} "
+                      f"rf={r['roofline_fraction']:.3f} "
+                      f"useful={r['useful_flops_fraction']:.3f}")
+    n = len(rows)
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    dt_us = (time.time() - t0) * 1e6
+    csv_rows.append(("roofline_table", f"{dt_us:.0f}",
+                     f"cells={n};" + ";".join(f"{k}={v}"
+                                              for k, v in dom.items())))
+    return rows
+
+
+def markdown_table(results_dir: str = "results/dryrun") -> str:
+    rows = load(results_dir)
+    lines = [HEADER]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(fmt_row(r))
+    return "\n".join(lines)

@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (
+        nas_scaleup, platform_generality, pruning_opt, roofline_report,
+        staircase, wave_verification,
+    )
+
+    csv_rows = []
+    print("== staircase (paper Fig. 1/3) ==")
+    staircase.run(csv_rows)
+    print("== wave verification (paper Fig. 5) ==")
+    wave_verification.run(csv_rows)
+    print("== pruning optimization (paper Table 2) ==")
+    pruning_opt.run(csv_rows)
+    print("== NAS scale-up (paper Table 3) ==")
+    nas_scaleup.run(csv_rows)
+    print("== platform generality (paper Tables 4/5) ==")
+    platform_generality.run(csv_rows)
+    print("== roofline table (EXPERIMENTS.md section Roofline) ==")
+    roofline_report.run(csv_rows)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

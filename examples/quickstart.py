@@ -1,0 +1,62 @@
+"""Quickstart: see the latency staircase and eliminate the tail.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Model the staircase for deepseek-7b's d_ff=11008 on a 16-way TP slice
+   of v5e (quantum = 16 shards x 128 lanes = 2048).
+2. Eq. 4: identify the wave-aligned candidate widths.
+3. Algorithm 2 both ways: cut latency (scale down) or grow capacity for
+   free (scale up within the current wave).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    LayerShape, TPU_V5E, TailEffectOptimizer, TunableLayer,
+    WaveQuantizationModel, analytic_candidates,
+)
+
+
+def main():
+    hw = TPU_V5E
+    model = WaveQuantizationModel(hw)
+    layer = LayerShape("deepseek_ffn", tokens=8192, d_in=4096,
+                       width=11008, shard_out=16)
+
+    print("== 1. the staircase (paper Fig. 1) ==")
+    q = model.width_quantum(16)
+    for w in range(8192, 12289, 512):
+        pt = model.evaluate(layer.with_width(w))
+        bar = "#" * int(pt.utilization * 40)
+        print(f"  width {w:>6}  L={pt.latency_s*1e6:7.2f}us "
+              f"waves={pt.waves}  util={pt.utilization:5.3f} {bar}")
+    print(f"  quantum Q = 16 shards x {hw.lane} lanes = {q}")
+
+    print("\n== 2. Eq. 4 candidates (argmax U x T = wave edges) ==")
+    cands = analytic_candidates(hw, layer, max_width=16384)
+    print(f"  {[int(c) for c in cands]}")
+
+    print("\n== 3. Algorithm 2 ==")
+    opt = TailEffectOptimizer(model)
+    layers = [TunableLayer(
+        layer=LayerShape(f"ffn_{i}", tokens=8192, d_in=4096,
+                         width=11008, shard_out=16),
+        candidates=cands, params_per_unit=3 * 4096)
+        for i in range(4)]
+    lat = opt.optimize_latency(layers,
+                               tau=0.10 * sum(tl.params(11008)
+                                              for tl in layers),
+                               delta=0.9)
+    print("  latency-oriented (Eq. 7):")
+    print("   " + lat.summary().replace("\n", "\n   "))
+    acc = opt.optimize_accuracy(layers)
+    print("  accuracy-oriented (Eq. 6):")
+    print("   " + acc.summary().replace("\n", "\n   "))
+
+
+if __name__ == "__main__":
+    main()

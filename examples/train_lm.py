@@ -1,0 +1,43 @@
+"""End-to-end driver: train an LM with checkpointed restart.
+
+    PYTHONPATH=src python examples/train_lm.py            # CPU-sized demo
+    PYTHONPATH=src python examples/train_lm.py --full     # ~0.5B config
+
+The demo trains a reduced qwen1.5 for a few hundred steps on the synthetic
+stream, killing and resuming from the checkpoint halfway to demonstrate
+fault tolerance.  ``--full`` uses the real qwen1.5-0.5b config (the ~100M+
+regime) — the same driver, sized for real accelerators.
+"""
+
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_cli  # noqa: E402
+
+
+def main():
+    full = "--full" in sys.argv
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        common = ["--arch", "qwen1.5-0.5b", "--seq", "128", "--batch", "8",
+                  "--ckpt-dir", ckpt, "--ckpt-every", "50",
+                  "--log-every", "25"]
+        if not full:
+            common += ["--reduced", "--d-model", "128", "--n-layers", "4"]
+        print("=== phase 1: train 100 steps (checkpoint at 50, 100) ===")
+        train_cli.main(common + ["--steps", "100"])
+        print("\n=== phase 2: 'node failure' -> relaunch, resumes at 100, "
+              "trains to 200 ===")
+        losses = train_cli.main(common + ["--steps", "200"])
+        assert losses[-1] < losses[0], "loss did not improve"
+        print("\nOK: resumed training continued the run "
+              f"(loss {losses[0]:.3f} -> {losses[-1]:.3f})")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, shapes_for, all_cells, get_config,
+    list_archs, reduced_config,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shapes_for", "all_cells",
+    "get_config", "list_archs", "reduced_config",
+]

@@ -1,0 +1,22 @@
+"""deepseek-7b [dense] — llama-arch MHA. 30L d_model=4096 32H (kv=32)
+d_ff=11008 vocab=102400 [arXiv:2401.02954]."""
+
+from repro.configs.base import ModelConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-7b",
+        family="dense",
+        n_layers=30,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=11008,
+        vocab_size=102400,
+        block_pattern=("attn",),
+        norm="rmsnorm",
+        mlp_gated=True,
+        sub_quadratic=False,
+    )

@@ -1,0 +1,30 @@
+"""Core: the paper's contribution — tail-effect modeling and elimination."""
+
+from repro.core.hardware import (
+    HardwareSpec, TPU_V5E, TPU_V4, TPU_V5P, TPU_LITE, get_hardware,
+)
+from repro.core.tail_model import (
+    LayerShape, StairPoint, WaveQuantizationModel, GridWaveModel,
+    staircase_edges, ceil_div,
+)
+from repro.core.candidates import (
+    analytic_candidates, profile_candidates, snap_down, snap_up, snap_nearest,
+)
+from repro.core.tail_optimizer import (
+    TailEffectOptimizer, TunableLayer, OptimizationResult, Move,
+    discretize_pruning_space,
+)
+from repro.core.roofline import RooflineReport, build_report
+from repro.core.hlo_analysis import (
+    parse_collectives, CollectiveSummary, cost_summary, count_ops,
+)
+
+__all__ = [
+    "HardwareSpec", "TPU_V5E", "TPU_V4", "TPU_V5P", "TPU_LITE",
+    "get_hardware", "LayerShape", "StairPoint", "WaveQuantizationModel",
+    "GridWaveModel", "staircase_edges", "ceil_div", "analytic_candidates",
+    "profile_candidates", "snap_down", "snap_up", "snap_nearest",
+    "TailEffectOptimizer", "TunableLayer", "OptimizationResult", "Move",
+    "discretize_pruning_space", "RooflineReport", "build_report",
+    "parse_collectives", "CollectiveSummary", "cost_summary", "count_ops",
+]

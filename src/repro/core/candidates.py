@@ -1,0 +1,105 @@
+"""Optimal width-candidate generation — paper Eq. 4.
+
+    C_i[m] = argmax_m ( U_i x T_i )
+
+The paper identifies, per layer, the width configurations that maximize
+(SM utilization x GPU throughput): these are the right edges of the latency
+staircase (Fig. 6).  We provide two generators:
+
+  * ``analytic_candidates`` — from the wave-quantization model: the right
+    edges are exactly the multiples of the quantum Q = shard_out * lane.
+  * ``profile_candidates`` — from a profiled/derived (width, U, T, L) table,
+    exactly the paper's procedure, so the optimizer also works when fed
+    measured tables (e.g. on hardware we do not have a closed form for).
+
+Both return sorted unique widths.  ``profile_candidates`` on a table produced
+by the analytic model must agree with ``analytic_candidates`` — this is a
+property test in tests/test_tail_model.py.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+from repro.core.tail_model import LayerShape, WaveQuantizationModel
+
+
+def analytic_candidates(
+    hw: HardwareSpec,
+    layer: LayerShape,
+    max_width: int | None = None,
+    min_width: int = 1,
+) -> np.ndarray:
+    """Multiples of the width quantum Q = shard_out * lane, in range."""
+    model = WaveQuantizationModel(hw)
+    q = model.width_quantum(layer.shard_out)
+    hi = max_width if max_width is not None else layer.width
+    first = max(q, ((min_width + q - 1) // q) * q)
+    cands = np.arange(first, hi + 1, q, dtype=np.int64)
+    if cands.size == 0:  # layer narrower than one quantum: only choice is Q
+        cands = np.array([q], dtype=np.int64)
+    return cands
+
+
+def profile_candidates(
+    widths: Sequence[int],
+    utilization: Sequence[float],
+    throughput: Sequence[float],
+    top_per_wave: int = 1,
+) -> np.ndarray:
+    """Paper Eq. 4 on a profiled table: argmax(U x T) within each stair.
+
+    Stairs are segmented by strictly-increasing throughput runs: within one
+    wave, throughput rises monotonically with width (same latency, more
+    useful FLOPs) and drops when a new wave starts.  The argmax of U*T in
+    each segment is the stair's right edge.
+    """
+    w = np.asarray(widths)
+    score = np.asarray(utilization, dtype=np.float64) * np.asarray(
+        throughput, dtype=np.float64
+    )
+    if w.size == 0:
+        return np.array([], dtype=np.int64)
+
+    # Segment boundaries: where the score drops (a new, mostly-idle wave).
+    seg_starts = [0]
+    for i in range(1, len(w)):
+        if score[i] < score[i - 1] * (1 - 1e-9):
+            seg_starts.append(i)
+    seg_starts.append(len(w))
+
+    out: list[int] = []
+    prev_best = -np.inf
+    segs = list(zip(seg_starts[:-1], seg_starts[1:]))
+    for si, (a, b) in enumerate(segs):
+        best = float(score[a:b].max())
+        # A trailing segment that never recovers the previous wave's best
+        # score is an incomplete wave (the sweep ended mid-stair): its
+        # "edge" is an artifact of where sampling stopped, not a candidate.
+        if si == len(segs) - 1 and si > 0 and best < prev_best:
+            break
+        seg = np.argsort(score[a:b])[::-1][:top_per_wave]
+        out.extend(int(w[a + i]) for i in seg)
+        prev_best = best
+    return np.array(sorted(set(out)), dtype=np.int64)
+
+
+def snap_down(candidates: np.ndarray, width: int) -> int | None:
+    """Paper Eq. 8a: max candidate strictly below ``width`` (scale down)."""
+    below = candidates[candidates < width]
+    return int(below.max()) if below.size else None
+
+
+def snap_up(candidates: np.ndarray, width: int) -> int | None:
+    """Paper Eq. 8b: min candidate strictly above ``width`` (scale up)."""
+    above = candidates[candidates > width]
+    return int(above.min()) if above.size else None
+
+
+def snap_nearest(candidates: np.ndarray, width: int) -> int:
+    """Nearest candidate (used by pruning-space discretization, section 4.4)."""
+    idx = int(np.argmin(np.abs(candidates - width)))
+    return int(candidates[idx])

@@ -1,0 +1,180 @@
+"""Extract roofline inputs from lowered/compiled XLA artifacts.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes accessed, but NOT
+collective traffic — we recover that by parsing the (post-SPMD-partitioning)
+HLO text and summing operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, as well as estimating the
+actual ring traffic per device from the replica-group sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[256,4096]{1,0}  or  f32[] or  u32[8,16]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# `%x = bf16[...] all-gather(%y), ...` — post-optimization HLO prints the
+# RESULT shape but not operand shapes; we derive operand size from the
+# result + group size.  `-done` halves of async pairs are skipped (the
+# `-start` carries the shape).
+_OP_RE = re.compile(
+    r"=\s*(?:\(?\s*(?:" + "|".join(_DTYPE_BYTES)
+    + r")\[[^=]*?)?\b(" + "|".join(COLLECTIVE_KINDS)
+    + r")(-start|-done)?\("
+)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+
+
+def shape_bytes(dtype: str, dims_str: str) -> int:
+    n = 1
+    if dims_str:
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    line: str
+
+    @property
+    def operand_bytes(self) -> int:
+        """Input-operand size, derived from the result shape."""
+        n = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return self.result_bytes // n
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * n
+        return self.result_bytes   # all-reduce / all-to-all / permute
+
+    @property
+    def ring_traffic_bytes(self) -> float:
+        """Per-device ICI bytes under a ring/bidirectional schedule."""
+        n = max(self.group_size, 1)
+        r = self.result_bytes
+        if self.kind == "collective-permute":
+            return float(r)                   # always moves one buffer
+        if n == 1:
+            return 0.0
+        if self.kind == "all-gather":
+            return r * (n - 1) / n            # result is the full gather
+        if self.kind == "reduce-scatter":
+            return r * (n - 1)                # result is one shard
+        if self.kind == "all-reduce":
+            return 2.0 * r * (n - 1) / n      # RS + AG
+        if self.kind == "all-to-all":
+            return r * (n - 1) / n
+        if self.kind == "collective-permute":
+            return float(r)
+        return float(r)
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    ops: list[CollectiveOp]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(o.operand_bytes for o in self.ops)
+
+    @property
+    def total_ring_traffic_bytes(self) -> float:
+        return sum(o.ring_traffic_bytes for o in self.ops)
+
+    def by_kind(self) -> dict[str, dict[str, float]]:
+        out: dict[str, dict[str, float]] = {}
+        for o in self.ops:
+            d = out.setdefault(o.kind, {"count": 0, "operand_bytes": 0,
+                                        "ring_traffic_bytes": 0.0})
+            d["count"] += 1
+            d["operand_bytes"] += o.operand_bytes
+            d["ring_traffic_bytes"] += o.ring_traffic_bytes
+        return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota v2 format [g0,g1,...]<=[N]: groups are rows of the reshaped
+        # device list -> group size is the product of all dims but the first.
+        dims = [int(x) for x in m.group(1).split(",")]
+        size = 1
+        for d in dims[1:]:
+            size *= d
+        return max(size, 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveSummary:
+    """Collect every collective in (post-partitioning) HLO, sized by its
+    result shape.  Async `-done` halves are skipped (the `-start` carries
+    the shape)."""
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if m.group(2) == "-done":
+            continue
+        # Result shapes: all dtype[dims] tokens between '=' and the op name.
+        eq = line.find("=")
+        before = line[eq + 1: m.start() + (m.end() - m.start())] \
+            if eq >= 0 else line[: m.start()]
+        before = line[eq + 1: line.find(kind, eq)] if eq >= 0 else before
+        result_bytes = sum(
+            shape_bytes(sm.group(1), sm.group(2))
+            for sm in _SHAPE_RE.finditer(before)
+        )
+        ops.append(CollectiveOp(kind=kind, result_bytes=result_bytes,
+                                group_size=_group_size(line),
+                                line=line.strip()))
+    return CollectiveSummary(ops=ops)
+
+
+def count_ops(hlo_text: str, names: Iterable[str]) -> dict[str, int]:
+    """Count occurrences of HLO op kinds (e.g. to spot remat recompute)."""
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"[\s)]{re.escape(n)}\(", hlo_text))
+    return out
+
+
+def cost_summary(compiled) -> dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {"flops": float(ca.get("flops", 0.0))}
+    total_bytes = 0.0
+    for k, v in ca.items():
+        if k.startswith("bytes accessed") and k in ("bytes accessed",):
+            total_bytes = float(v)
+    if total_bytes == 0.0:
+        total_bytes = float(ca.get("bytes accessed", 0.0))
+    out["bytes_accessed"] = total_bytes
+    for k in ("transcendentals", "optimal_seconds"):
+        if k in ca:
+            out[k] = float(ca[k])
+    return out

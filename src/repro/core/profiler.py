@@ -1,0 +1,126 @@
+"""Per-layer L/U/T table builders — the paper's "Step 1: pre-analysis".
+
+The paper profiles each layer's latency / SM-utilization / throughput over a
+width sweep with nvprof.  Off-GPU we derive the same tables from three
+sources (cross-checked against each other in tests):
+
+  * ``analytic``     — the wave-quantization closed form (tail_model.py)
+  * ``hlo``          — lower+compile the layer at each width on the current
+                       backend and read cost_analysis() FLOPs (validates the
+                       useful-FLOPs accounting; CPU XLA does not tile-pad, so
+                       padding comes from the analytic overlay)
+  * ``pallas_grid``  — grid-cell counts for a kernel's BlockSpec (the literal
+                       ceil(B/S) of paper Eq. 3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+from repro.core.tail_model import (
+    GridWaveModel, LayerShape, WaveQuantizationModel, ceil_div,
+)
+
+
+@dataclasses.dataclass
+class LayerProfile:
+    name: str
+    widths: np.ndarray
+    latency_s: np.ndarray
+    utilization: np.ndarray
+    throughput: np.ndarray
+    waves: np.ndarray
+    source: str
+
+    def as_table(self) -> str:
+        rows = ["width,latency_us,utilization,throughput_tflops,waves"]
+        for i in range(len(self.widths)):
+            rows.append(
+                f"{self.widths[i]},{self.latency_s[i] * 1e6:.4f},"
+                f"{self.utilization[i]:.4f},"
+                f"{self.throughput[i] / 1e12:.4f},{self.waves[i]}"
+            )
+        return "\n".join(rows)
+
+
+def analytic_profile(hw: HardwareSpec, layer: LayerShape,
+                     widths: Sequence[int]) -> LayerProfile:
+    model = WaveQuantizationModel(hw)
+    pts = model.staircase(layer, widths)
+    return LayerProfile(
+        name=layer.name,
+        widths=np.array([p.width for p in pts]),
+        latency_s=np.array([p.latency_s for p in pts]),
+        utilization=np.array([p.utilization for p in pts]),
+        throughput=np.array([p.throughput for p in pts]),
+        waves=np.array([p.waves for p in pts]),
+        source="analytic",
+    )
+
+
+def hlo_profile(hw: HardwareSpec, layer: LayerShape,
+                widths: Sequence[int]) -> LayerProfile:
+    """Compile (tokens, d_in) @ (d_in, w) per width; read HLO FLOPs.
+
+    Latency is HLO_FLOPs (with analytic tile padding applied to the width
+    dim) over peak — i.e. the compiled artifact supplies the useful work and
+    the hardware model supplies the quantization, mirroring how the paper
+    derives throughput from "theoretical FLOPs and profiled latency" (4.3
+    Step 1).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    model = WaveQuantizationModel(hw)
+    lat, util, thr, wav = [], [], [], []
+    for w in widths:
+        x = jax.ShapeDtypeStruct((layer.tokens, layer.d_in), jnp.bfloat16)
+        wt = jax.ShapeDtypeStruct((layer.d_in, int(w)), jnp.bfloat16)
+        compiled = jax.jit(lambda a, b: a @ b).lower(x, wt).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        useful = float(ca.get("flops", 2.0 * layer.tokens * layer.d_in * w))
+        pt = model.evaluate(layer.with_width(int(w)))
+        lat.append(pt.latency_s)
+        util.append(useful / pt.padded_flops if pt.padded_flops else 0.0)
+        thr.append(useful / pt.latency_s if pt.latency_s else 0.0)
+        wav.append(pt.waves)
+    return LayerProfile(
+        name=layer.name, widths=np.asarray(list(widths)),
+        latency_s=np.asarray(lat), utilization=np.asarray(util),
+        throughput=np.asarray(thr), waves=np.asarray(wav), source="hlo",
+    )
+
+
+def pallas_grid_profile(hw: HardwareSpec, layer: LayerShape,
+                        widths: Sequence[int],
+                        block_m: int = 256, block_n: int = 256,
+                        block_k: int = 512) -> LayerProfile:
+    """Grid-cell wave counts for the tiled-matmul kernel's BlockSpec."""
+    block_flops = 2.0 * block_m * block_n * block_k
+    gw = GridWaveModel(hw, block_flops)
+    lat, util, thr, wav, blocks = [], [], [], [], []
+    for w in widths:
+        per_dev_w = ceil_div(int(w), layer.shard_out)
+        b = gw.blocks_for(layer.tokens, per_dev_w, layer.d_in,
+                          block_m, block_n, block_k)
+        g = gw.evaluate(b)
+        useful = 2.0 * layer.tokens * layer.d_in * w
+        padded = g.waves * hw.cores_per_chip * block_flops \
+            * layer.shard_out
+        lat.append(g.latency_s)
+        util.append(min(useful / padded, 1.0) if padded else 0.0)
+        thr.append(useful / g.latency_s if g.latency_s else 0.0)
+        wav.append(g.waves)
+        blocks.append(b)
+    return LayerProfile(
+        name=layer.name, widths=np.asarray(list(widths)),
+        latency_s=np.asarray(lat), utilization=np.asarray(util),
+        throughput=np.asarray(thr), waves=np.asarray(wav),
+        source="pallas_grid",
+    )

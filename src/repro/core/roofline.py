@@ -1,0 +1,130 @@
+"""Three-term roofline from dry-run artifacts.
+
+    compute term    = HLO_FLOPs     / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes     / (chips x HBM_bw)
+    collective term = coll_bytes    / (chips x link_bw)
+
+``cost_analysis()`` on a post-SPMD-partitioned executable reports the
+*per-device* program, so per-device terms divide by per-chip peaks directly;
+we report totals as per-device x chips so both conventions agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.hardware import HardwareSpec
+from repro.core.hlo_analysis import CollectiveSummary
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities from the partitioned module
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_operand_bytes: float     # prompt accounting: sum of operands
+    collective_ring_bytes: float        # ring-schedule traffic estimate
+    model_flops_total: float            # 6*N*D (dense) / 6*N_active*D (MoE)
+    hw: HardwareSpec
+    collectives_by_kind: dict | None = None
+    memory_per_device_bytes: float | None = None
+
+    # ---- terms (seconds) -------------------------------------------------
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / self.hw.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / self.hw.hbm_bandwidth
+
+    @property
+    def collective_s(self) -> float:
+        if self.hw.ici_bandwidth == 0:
+            return 0.0
+        return self.collective_ring_bytes / self.hw.ici_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time: the max term (perfect overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — padding/remat/redundancy waste."""
+        total_hlo = self.hlo_flops_per_device * self.chips
+        if total_hlo == 0:
+            return 0.0
+        return self.model_flops_total / total_hlo
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs rate vs peak, at the modeled bound time.
+
+        = (model_flops / bound_s) / (chips * peak) — the MFU the machine
+        would achieve if it runs exactly at the dominant roofline term.
+        """
+        if self.bound_s == 0:
+            return 0.0
+        ach = self.model_flops_total / self.bound_s
+        return ach / (self.chips * self.hw.peak_flops_bf16)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_ring_bytes": self.collective_ring_bytes,
+            "model_flops_total": self.model_flops_total,
+            "memory_per_device_bytes": self.memory_per_device_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "hw": self.hw.name,
+            "collectives_by_kind": self.collectives_by_kind,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:>26} {self.shape:>12} {self.mesh:>10} "
+            f"C={self.compute_s:9.3e}s M={self.memory_s:9.3e}s "
+            f"X={self.collective_s:9.3e}s dom={self.dominant:<10} "
+            f"useful={self.useful_flops_fraction:6.3f} "
+            f"roofline_frac={self.roofline_fraction:6.3f}"
+        )
+
+
+def build_report(*, arch: str, shape: str, mesh: str, chips: int,
+                 cost: dict, collectives: CollectiveSummary,
+                 model_flops_total: float, hw: HardwareSpec,
+                 memory_per_device_bytes: float | None = None
+                 ) -> RooflineReport:
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops_per_device=cost.get("flops", 0.0),
+        hlo_bytes_per_device=cost.get("bytes_accessed", 0.0),
+        collective_operand_bytes=float(collectives.total_operand_bytes),
+        collective_ring_bytes=float(collectives.total_ring_traffic_bytes),
+        model_flops_total=model_flops_total,
+        hw=hw,
+        collectives_by_kind=collectives.by_kind(),
+        memory_per_device_bytes=memory_per_device_bytes,
+    )

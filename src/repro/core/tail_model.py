@@ -1,0 +1,190 @@
+"""The latency-staircase / tail-effect model, adapted from GPU waves to TPU tiles.
+
+Paper Eq. 3 models one conv layer as
+
+    L = dL * ceil(B / S),      B = threads_per_filter * F / threads_per_block
+
+i.e. work is quantized into *waves* of S SMs and a partial last wave (the GPU
+tail) costs a full cycle.  On TPU the same ceil-quantization appears at three
+levels (see DESIGN.md section 2):
+
+  1. MXU/VPU tiles:  a (M, K) x (K, N) matmul issues
+         ceil(M/Tm) * ceil(K/Tk) * ceil(N/Tn)
+     systolic tile passes; the residual of each dim burns a full tile.
+  2. Pallas grid "waves": grid cells map onto ``cores_per_chip`` cores,
+     L = dL * ceil(num_cells / cores) — literally paper Eq. 3.
+  3. Mesh shards: a dim d sharded n ways costs ceil(d/n) per device; every
+     device pays the max (ragged) shard.
+
+``WaveQuantizationModel`` composes (1) and (3) into per-layer staircase
+functions L(width), U(width), T(width) — the quantities the paper profiles
+with nvprof — and ``GridWaveModel`` implements (2) for the Fig. 5
+verification benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """One width-adjustable matmul layer: (tokens, d_in) @ (d_in, width).
+
+    ``shard_in`` / ``shard_out`` are the mesh-axis sizes sharding ``d_in`` and
+    ``width`` respectively (1 = unsharded).  ``tokens`` is the *per-device*
+    token count (batch already sharded by data parallelism).  ``flop_multiplier``
+    scales FLOPs for layers where one "width unit" does more than one MAC per
+    token-input pair (e.g. GQA heads, experts).
+    """
+
+    name: str
+    tokens: int
+    d_in: int
+    width: int
+    shard_in: int = 1
+    shard_out: int = 1
+    dtype_bits: int = 16
+    flop_multiplier: float = 1.0
+
+    def with_width(self, width: int) -> "LayerShape":
+        return dataclasses.replace(self, width=width)
+
+
+@dataclasses.dataclass(frozen=True)
+class StairPoint:
+    width: int
+    latency_s: float        # modeled L
+    utilization: float      # paper's U: useful / (padded quantum) work
+    throughput: float       # paper's T: FLOP/s achieved
+    waves: int              # ceil count along the width dim
+    flops: float            # useful (model) FLOPs
+    padded_flops: float     # FLOPs actually executed incl. tile padding
+
+
+class WaveQuantizationModel:
+    """Closed-form staircase model L(width) = dL * ceil(width / Q)."""
+
+    def __init__(self, hw: HardwareSpec):
+        self.hw = hw
+
+    # ---- quanta ---------------------------------------------------------
+    def width_quantum(self, shard_out: int) -> int:
+        """Q: widths that are multiples of this have zero tail."""
+        return shard_out * self.hw.lane
+
+    def padded_dim(self, d: int, shard: int, tile: int) -> int:
+        """Per-device padded size of dim ``d`` sharded ``shard`` ways."""
+        per_dev = ceil_div(d, shard)
+        return ceil_div(per_dev, tile) * tile
+
+    # ---- per-layer staircase -------------------------------------------
+    def waves(self, layer: LayerShape) -> int:
+        """Tile waves along the adjustable width dim (paper's ceil(B/S))."""
+        per_dev = ceil_div(layer.width, layer.shard_out)
+        return ceil_div(per_dev, self.hw.lane)
+
+    def evaluate(self, layer: LayerShape) -> StairPoint:
+        hw = self.hw
+        sub = hw.sublane(layer.dtype_bits)
+        m_pad = ceil_div(layer.tokens, sub) * sub
+        k_pad = self.padded_dim(layer.d_in, layer.shard_in, hw.lane)
+        n_waves = self.waves(layer)
+        n_pad = n_waves * hw.lane
+
+        useful = 2.0 * layer.tokens * layer.d_in * layer.width \
+            * layer.flop_multiplier
+        # Per-device padded work (d_in and width divided across shards).
+        padded_per_dev = 2.0 * m_pad * k_pad * n_pad * layer.flop_multiplier
+        padded_total = padded_per_dev * layer.shard_in * layer.shard_out
+
+        compute_s = padded_per_dev / hw.peak_flops_bf16
+        bytes_per_dev = (
+            m_pad * k_pad + k_pad * n_pad + m_pad * n_pad
+        ) * layer.dtype_bits // 8
+        memory_s = bytes_per_dev / hw.hbm_bandwidth
+        latency = max(compute_s, memory_s)
+
+        util = useful / padded_total if padded_total else 0.0
+        return StairPoint(
+            width=layer.width,
+            latency_s=latency,
+            utilization=util,
+            throughput=useful / latency if latency else 0.0,
+            waves=n_waves,
+            flops=useful,
+            padded_flops=padded_total,
+        )
+
+    def staircase(
+        self, layer: LayerShape, widths: Sequence[int]
+    ) -> list[StairPoint]:
+        return [self.evaluate(layer.with_width(int(w))) for w in widths]
+
+    def staircase_arrays(self, layer: LayerShape, widths: Sequence[int]):
+        pts = self.staircase(layer, widths)
+        return (
+            np.array([p.width for p in pts]),
+            np.array([p.latency_s for p in pts]),
+            np.array([p.utilization for p in pts]),
+            np.array([p.throughput for p in pts]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GridWave:
+    blocks: int     # B: number of grid cells (thread blocks in the paper)
+    waves: int      # W: ceil(B / S)
+    latency_s: float  # L = dL * W
+
+
+class GridWaveModel:
+    """Paper Eq. 3 verbatim, for a Pallas kernel grid.
+
+    A ``pallas_call`` with grid (gm, gn, gk) issues B = gm*gn*gk cells; cells
+    are scheduled onto ``cores_per_chip`` cores, so L = dL * ceil(B / S).
+    This is the direct TPU transcription of the paper's block->SM wave model
+    and is what ``benchmarks/wave_verification.py`` checks against the
+    analytic staircase (paper Fig. 5's B / W / L panels).
+    """
+
+    def __init__(self, hw: HardwareSpec, block_flops: float):
+        self.hw = hw
+        self.block_flops = block_flops
+        # dL: one core processes one cell's FLOPs at peak.
+        self.delta_l = block_flops / hw.peak_flops_bf16
+
+    def blocks_for(self, m: int, n: int, k: int, bm: int, bn: int, bk: int) -> int:
+        return ceil_div(m, bm) * ceil_div(n, bn) * ceil_div(k, bk)
+
+    def evaluate(self, blocks: int) -> GridWave:
+        waves = ceil_div(blocks, self.hw.cores_per_chip)
+        return GridWave(blocks=blocks, waves=waves,
+                        latency_s=self.delta_l * waves)
+
+
+def staircase_edges(widths: np.ndarray, latency: np.ndarray) -> np.ndarray:
+    """Right edges of each stair: the last width before latency increases.
+
+    These are the paper's profile-derived optimal candidates (Fig. 6: the
+    right edge point has max utilization and max throughput within a wave).
+    """
+    widths = np.asarray(widths)
+    latency = np.asarray(latency)
+    edges = []
+    for i in range(len(widths) - 1):
+        if latency[i + 1] > latency[i] * (1 + 1e-9):
+            edges.append(int(widths[i]))
+    if len(widths):
+        edges.append(int(widths[-1]))
+    return np.array(sorted(set(edges)))

@@ -1,0 +1,295 @@
+"""GPU(-analogue)-aware model configuration optimization — paper Algorithm 2.
+
+Two duals, exactly as in the paper section 4.3:
+
+  * latency-oriented (Eq. 7):  maximize sum LG_i  s.t.  sum PG_i in (-tau, tau)
+  * accuracy-oriented (Eq. 6): maximize sum PG_i  s.t.  sum LG_i >= 0
+
+where per layer i (Eq. 5):  LG_i = L_i[R_old] - L_i[R_new]   (latency gain)
+                            PG_i = params(R_new) - params(R_old)  (param gain)
+
+The mechanics follow Algorithm 2: identify per-layer candidates C_i[m]
+(Eq. 4, see candidates.py), keep two queues ranked by LG, greedily pop the
+max-LG layer to *scale down* (Eq. 8a) and balance the parameter budget by
+popping min-LG layers to *scale up* (Eq. 8b); after all layers are adjusted,
+check L_new <= delta * L_old and loosen tau if the target is missed
+(Algorithm 2 line 18).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import candidates as cand
+from repro.core.tail_model import LayerShape, WaveQuantizationModel, ceil_div
+
+
+@dataclasses.dataclass
+class TunableLayer:
+    """One width-adjustable layer handed to the optimizer."""
+
+    layer: LayerShape
+    candidates: np.ndarray
+    # parameters contributed per unit of width (e.g. d_in for a dense layer,
+    # d_in + d_out for a conv filter that also feeds the next layer's input).
+    params_per_unit: float
+    min_width: int = 1
+    max_width: int | None = None
+
+    def params(self, width: int) -> float:
+        return self.params_per_unit * width
+
+
+@dataclasses.dataclass
+class Move:
+    layer: str
+    kind: str          # "down" | "up"
+    old_width: int
+    new_width: int
+    latency_gain_s: float
+    param_gain: float
+
+
+@dataclasses.dataclass
+class OptimizationResult:
+    old_widths: dict[str, int]
+    new_widths: dict[str, int]
+    latency_old_s: float
+    latency_new_s: float
+    params_old: float
+    params_new: float
+    moves: list[Move]
+    tau_final: float
+    satisfied: bool
+
+    @property
+    def latency_reduction(self) -> float:
+        if self.latency_old_s == 0:
+            return 0.0
+        return 1.0 - self.latency_new_s / self.latency_old_s
+
+    @property
+    def param_gain(self) -> float:
+        return self.params_new - self.params_old
+
+    def summary(self) -> str:
+        lines = [
+            f"latency: {self.latency_old_s * 1e6:.2f}us -> "
+            f"{self.latency_new_s * 1e6:.2f}us "
+            f"({self.latency_reduction * 100:+.1f}% reduction)",
+            f"params:  {self.params_old / 1e6:.3f}M -> "
+            f"{self.params_new / 1e6:.3f}M ({self.param_gain / 1e6:+.3f}M)",
+            f"tau_final={self.tau_final:.3g} satisfied={self.satisfied}",
+        ]
+        for m in self.moves:
+            lines.append(
+                f"  [{m.kind:>4}] {m.layer}: {m.old_width} -> {m.new_width} "
+                f"(LG {m.latency_gain_s * 1e6:+.2f}us, PG {m.param_gain:+.0f})"
+            )
+        return "\n".join(lines)
+
+
+class TailEffectOptimizer:
+    """Paper Algorithm 2 on the wave-quantization latency model."""
+
+    def __init__(self, model: WaveQuantizationModel):
+        self.model = model
+
+    # ---- helpers ---------------------------------------------------------
+    def _latency(self, tl: TunableLayer, width: int) -> float:
+        return self.model.evaluate(tl.layer.with_width(width)).latency_s
+
+    def _total_latency(self, layers: Sequence[TunableLayer],
+                       widths: dict[str, int]) -> float:
+        return sum(self._latency(tl, widths[tl.layer.name]) for tl in layers)
+
+    def _total_params(self, layers: Sequence[TunableLayer],
+                      widths: dict[str, int]) -> float:
+        return sum(tl.params(widths[tl.layer.name]) for tl in layers)
+
+    def _down(self, tl: TunableLayer, width: int) -> int | None:
+        w = cand.snap_down(tl.candidates, width)
+        if w is not None and w < tl.min_width:
+            return None
+        return w
+
+    def _up(self, tl: TunableLayer, width: int) -> int | None:
+        w = cand.snap_up(tl.candidates, width)
+        if w is not None and tl.max_width is not None and w > tl.max_width:
+            return None
+        return w
+
+    # ---- latency-oriented (Eq. 7, Algorithm 2) ----------------------------
+    def optimize_latency(
+        self,
+        layers: Sequence[TunableLayer],
+        tau: float,
+        delta: float = 0.9,
+        max_rounds: int = 8,
+    ) -> OptimizationResult:
+        """Maximize sum LG subject to sum PG in (-tau, tau); retry with
+        loosened tau until L_new <= delta * L_old (Algorithm 2 lines 15-18).
+
+        ``tau`` is in absolute parameter counts.
+        """
+        old_widths = {tl.layer.name: tl.layer.width for tl in layers}
+        l_old = self._total_latency(layers, old_widths)
+        p_old = self._total_params(layers, old_widths)
+
+        best: OptimizationResult | None = None
+        cur_tau = tau
+        for _ in range(max_rounds):
+            res = self._one_latency_round(layers, old_widths, l_old, p_old,
+                                          cur_tau, delta)
+            if best is None or res.latency_new_s < best.latency_new_s:
+                best = res
+            if res.satisfied:
+                return res
+            cur_tau *= 2.0  # Algorithm 2 line 18: loosen and repeat
+        assert best is not None
+        return best
+
+    def _one_latency_round(self, layers, old_widths, l_old, p_old, tau,
+                           delta) -> OptimizationResult:
+        widths = dict(old_widths)
+        moves: list[Move] = []
+
+        # Per-layer LG/PG estimates for one scale-down step (Alg. 2 line 6).
+        lg: dict[str, float] = {}
+        for tl in layers:
+            name = tl.layer.name
+            down = self._down(tl, widths[name])
+            lg[name] = (self._latency(tl, widths[name])
+                        - self._latency(tl, down)) if down is not None else 0.0
+
+        by_name = {tl.layer.name: tl for tl in layers}
+        # Queue ranked by LG (Alg. 2 line 7).  Layers appear once each.
+        queue = sorted(lg, key=lambda n: lg[n], reverse=True)
+
+        def pg_total() -> float:
+            return (self._total_params(layers, widths) - p_old)
+
+        while queue:
+            j = queue.pop(0)                 # Argmax LG (line 9)
+            tl = by_name[j]
+            down = self._down(tl, widths[j])
+            applied_down = False
+            old_w = widths[j]
+            if down is not None and lg[j] > 0:
+                gain = self._latency(tl, widths[j]) - self._latency(tl, down)
+                dp = tl.params(down) - tl.params(widths[j])
+                moves.append(Move(j, "down", widths[j], down, gain, dp))
+                widths[j] = down
+                applied_down = True
+
+            # Balance PG by scaling up min-LG layers (lines 11-13).
+            while queue and not (-tau < pg_total() < tau):
+                k = queue.pop(-1)            # Argmin LG (line 12)
+                tk = by_name[k]
+                up = self._up(tk, widths[k])
+                if up is None:
+                    continue
+                dp = tk.params(up) - tk.params(widths[k])
+                # only balance if the move brings PG closer to the window
+                if abs(pg_total() + dp) >= abs(pg_total()):
+                    continue
+                extra = self._latency(tk, up) - self._latency(tk, widths[k])
+                moves.append(Move(k, "up", widths[k], up, -extra, dp))
+                widths[k] = up
+
+            # Eq. 7 is a hard constraint: if no up-candidates remain to
+            # balance this scale-down, revert it.
+            if applied_down and not (-tau < pg_total() < tau):
+                widths[j] = old_w
+                moves.pop()
+
+        l_new = self._total_latency(layers, widths)
+        return OptimizationResult(
+            old_widths=dict(old_widths), new_widths=widths,
+            latency_old_s=l_old, latency_new_s=l_new,
+            params_old=p_old, params_new=self._total_params(layers, widths),
+            moves=moves, tau_final=tau,
+            satisfied=l_new <= l_old * delta,
+        )
+
+    # ---- accuracy-oriented (Eq. 6) ----------------------------------------
+    def optimize_accuracy(
+        self,
+        layers: Sequence[TunableLayer],
+        latency_slack: float = 0.0,
+    ) -> OptimizationResult:
+        """Maximize sum PG subject to sum LG >= -latency_slack * L_old.
+
+        Pass 1 snaps every layer *up* to the right edge of its current wave —
+        by construction latency is unchanged (same wave) and capacity grows
+        for free (the paper's EfficientNet move, Table 3).  Pass 2 greedily
+        spends any remaining latency slack on full wave jumps, largest
+        PG-per-latency first.
+        """
+        old_widths = {tl.layer.name: tl.layer.width for tl in layers}
+        l_old = self._total_latency(layers, old_widths)
+        p_old = self._total_params(layers, old_widths)
+        budget = latency_slack * l_old
+
+        widths = dict(old_widths)
+        moves: list[Move] = []
+        for tl in layers:
+            name = tl.layer.name
+            up = self._up(tl, widths[name])
+            if up is None:
+                continue
+            extra = self._latency(tl, up) - self._latency(tl, widths[name])
+            if extra <= 1e-15:  # same wave: free capacity
+                dp = tl.params(up) - tl.params(widths[name])
+                moves.append(Move(name, "up", widths[name], up, -extra, dp))
+                widths[name] = up
+
+        # Pass 2: spend the slack budget on wave jumps.
+        improved = True
+        while improved and budget > 0:
+            improved = False
+            ranked: list[tuple[float, TunableLayer, int, float]] = []
+            for tl in layers:
+                name = tl.layer.name
+                up = self._up(tl, widths[name])
+                if up is None:
+                    continue
+                extra = self._latency(tl, up) - self._latency(tl, widths[name])
+                dp = tl.params(up) - tl.params(widths[name])
+                if extra <= budget and dp > 0:
+                    ranked.append((dp / max(extra, 1e-15), tl, up, extra))
+            if ranked:
+                ranked.sort(key=lambda t: t[0], reverse=True)
+                _, tl, up, extra = ranked[0]
+                name = tl.layer.name
+                dp = tl.params(up) - tl.params(widths[name])
+                moves.append(Move(name, "up", widths[name], up, -extra, dp))
+                widths[name] = up
+                budget -= extra
+                improved = True
+
+        l_new = self._total_latency(layers, widths)
+        return OptimizationResult(
+            old_widths=old_widths, new_widths=widths,
+            latency_old_s=l_old, latency_new_s=l_new,
+            params_old=p_old, params_new=self._total_params(layers, widths),
+            moves=moves, tau_final=0.0,
+            satisfied=l_new <= l_old * (1 + latency_slack) + 1e-12,
+        )
+
+
+def discretize_pruning_space(
+    layers: Sequence[TunableLayer],
+    target_widths: dict[str, int],
+) -> dict[str, int]:
+    """Section 4.4 "Advancing Filter Pruning": replace a pruning method's
+    continuous per-layer width targets with the nearest tail-free candidates,
+    giving the pruner a *discrete* search space with no GPU-tail waste."""
+    out = {}
+    for tl in layers:
+        name = tl.layer.name
+        out[name] = cand.snap_nearest(tl.candidates, target_widths[name])
+    return out

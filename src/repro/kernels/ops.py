@@ -1,0 +1,88 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, reference path elsewhere.
+
+The model code calls these; on the CPU dry-run they lower the memory-safe
+jnp reference (real HLO, real cost analysis), on TPU runtime they hit the
+Pallas kernels, and with ``force='pallas_interpret'`` they execute the
+kernel bodies in Python for correctness tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul_tiled import matmul_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.rwkv6 import rwkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(force: Optional[str]) -> str:
+    if force:
+        return force
+    return "pallas" if _on_tpu() else "ref"
+
+
+def matmul(x, w, *, block_m: int = 256, block_n: int = 256,
+           block_k: int = 512, force: Optional[str] = None):
+    """Tile-quantized matmul.  Pads M/N/K up to block multiples — the pad
+    FLOPs are the tail the width optimizer removes by resizing N."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref_lib.matmul_ref(x, w)
+    m, k = x.shape
+    _, n = w.shape
+    pad = lambda d, b: (-d) % b
+    pm, pn, pk = pad(m, block_m), pad(n, block_n), pad(k, block_k)
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    out = matmul_pallas(xp, wp, block_m=block_m, block_n=block_n,
+                        block_k=block_k,
+                        interpret=(mode == "pallas_interpret"))
+    return out[:m, :n]
+
+
+def flash_attention(q, k, v, *, mask_kind: str = "causal", window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    force: Optional[str] = None):
+    mode = _mode(force)
+    if mode == "ref":
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, mask_kind=mask_kind,
+                                 window=window)
+    return flash_attention_pallas(
+        q, k, v, mask_kind=mask_kind, window=window, block_q=block_q,
+        block_kv=block_kv, interpret=(mode == "pallas_interpret"))
+
+
+def rglru_scan(a, b, h0, *, force: Optional[str] = None):
+    mode = _mode(force)
+    if mode == "ref":
+        return ref_lib.rglru_ref(a, b, h0)
+    return rglru_pallas(a, b, h0,
+                        interpret=(mode == "pallas_interpret"))
+
+
+def rwkv6(r, k, v, log_w, u, *, chunk: int = 32,
+          force: Optional[str] = None):
+    mode = _mode(force)
+    if mode == "ref":
+        return ref_lib.rwkv6_ref(r, k, v, log_w, u)
+    return rwkv6_pallas(r, k, v, log_w, u, chunk=chunk,
+                        interpret=(mode == "pallas_interpret"))
+
+
+def moe_gmm(x, w, *, force: Optional[str] = None):
+    mode = _mode(force)
+    if mode == "ref":
+        return ref_lib.moe_gmm_ref(x, w)
+    return moe_gmm_pallas(x, w, interpret=(mode == "pallas_interpret"))

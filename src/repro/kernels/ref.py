@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract the kernels must
+match; tests sweep shapes/dtypes and assert_allclose against these)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, mask_kind: str = "causal",
+                  window: int = 0) -> jax.Array:
+    """Exact softmax attention.  q: (B,Sq,H,dh); k/v: (B,Skv,KV,dh)."""
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, sq, kv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    iq = jnp.arange(sq)[:, None]
+    jk = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if mask_kind in ("causal", "local"):
+        mask &= jk <= iq
+    if mask_kind == "local" and window > 0:
+        mask &= jk > iq - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def rglru_ref(a, b, h0):
+    """Sequential y_t = a_t*h_{t-1} + b_t.  a/b: (B,T,W) f32; h0: (B,W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    h, ys = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                    b.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h
+
+
+def rwkv6_ref(r, k, v, log_w, u):
+    """Sequential RWKV6 core (see models/recurrent.rwkv_ref)."""
+    from repro.models.recurrent import rwkv_ref
+    return rwkv_ref(r, k, v, log_w, u)[0]
+
+
+def moe_gmm_ref(x, w):
+    """(E,C,D) @ (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""RG-LRU linear recurrence as a Pallas TPU kernel.
+
+Grid: (batch, width_blocks, time_chunks), time innermost; the hidden state
+h (1, bw) persists in VMEM scratch across time chunks (sequential grid).
+Within a chunk the recurrence h_t = a_t h_{t-1} + b_t is unrolled over the
+chunk's CT steps on the VPU — per-channel elementwise work, lane-aligned
+blocks of bw channels.
+
+Inputs are the precomputed per-step (a, b) arrays (gates are cheap dense
+ops best left to the MXU outside the kernel); this kernel is the memory-
+bound sequential core that XLA cannot parallelize well on its own.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, h_ref, *, ct: int,
+                  n_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _():
+        h_ref[...] = h0_ref[...]
+
+    h = h_ref[...]                       # (1, bw)
+    a = a_ref[0]                         # (ct, bw)
+    b = b_ref[0]
+    ys = []
+    for t in range(ct):
+        h = a[t][None, :] * h + b[t][None, :]
+        ys.append(h)
+    y_ref[0] = jnp.concatenate(ys, axis=0)
+    h_ref[...] = h
+
+
+def rglru_pallas(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                 chunk_t: int = 8, block_w: int = 128,
+                 interpret: bool = False):
+    """a, b: (B, T, W) fp32; h0: (B, W).  Returns (y (B,T,W), h_last (B,W)).
+
+    y_t = a_t * h_{t-1} + b_t  (h_{-1} = h0).
+    """
+    bsz, t, w = a.shape
+    ct = min(chunk_t, t)
+    bw = min(block_w, w)
+    assert t % ct == 0 and w % bw == 0, (t, w, ct, bw)
+    grid = (bsz, w // bw, t // ct)
+
+    y = pl.pallas_call(
+        functools.partial(_rglru_kernel, ct=ct, n_t=t // ct),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, bw), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, ct, bw), lambda bi, wi, ti: (bi, ti, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, y[:, -1]

@@ -1,0 +1,6 @@
+from repro.launch.mesh import (
+    describe, make_host_mesh, make_mesh, make_production_mesh,
+)
+
+__all__ = ["describe", "make_host_mesh", "make_mesh",
+           "make_production_mesh"]

@@ -1,0 +1,359 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns everything ``dryrun.py`` needs to lower a cell
+without allocating a single real array: the step kind, the abstract args
+(with NamedShardings attached), and metadata for the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.layers import COMPUTE_DTYPE
+from repro.parallel import sharding as shlib
+from repro.train.optim import AdamState
+
+
+def _ax(mesh: Mesh, axes):
+    return shlib._filter_axes(axes, mesh)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def cell_rules(mesh: Mesh, cfg: ModelConfig, global_batch: int) -> dict:
+    """Logical-rule overrides for one cell.
+
+    * batch replicated when it can't shard evenly (long_500k, batch=1);
+    * heads / kv_heads replicated over `model` when the head count is not
+      divisible by the axis size — the honest baseline for e.g. yi-34b's 56
+      heads on TP=16.  (The paper's scale-up move — padding the head count
+      to the quantum — is evaluated separately in the perf pass.)
+    """
+    rules: dict = {}
+    axes = _ax(mesh, ("pod", "data"))
+    dp = 1
+    if axes:
+        if isinstance(axes, str):
+            axes = (axes,)
+        for a in axes:
+            dp *= mesh.shape[a]
+    if global_batch % max(dp, 1) != 0:
+        rules["batch"] = None
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if cfg.n_heads % tp != 0:
+        rules["heads"] = None
+    if cfg.n_kv_heads % tp != 0:
+        rules["kv_heads"] = None
+    if cfg.moe and cfg.n_experts % tp != 0:
+        rules["expert"] = None
+    from repro.models.transformer import padded_vocab
+    if padded_vocab(cfg) % tp != 0:
+        rules["vocab"] = None
+    if cfg.seq_parallel_acts:
+        rules["act_seq"] = "model"
+    if cfg.d_ff % tp != 0:
+        rules["mlp"] = None
+    # ZeRO across pods for >=200B params: one 256-chip pod cannot hold the
+    # optimizer state of llama4-maverick even at int8 moments + bf16
+    # master; the multi-pod mesh extends the FSDP axis over the DCI.
+    from repro.models.transformer import count_params_analytic
+    if ("pod" in mesh.axis_names
+            and count_params_analytic(cfg) > 200e9):
+        rules["fsdp"] = ("data", "pod")
+    return rules
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# param / state spec trees
+# ---------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig, mesh: Mesh, dtype=None):
+    """Abstract param tree with shardings (no allocation)."""
+    shapes = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = shlib.param_pspecs(shapes, mesh=mesh)
+    def mk(s, sp):
+        dt = dtype or s.dtype
+        return _sds(s.shape, dt, mesh, sp)
+    return jax.tree.map(mk, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, P)), specs
+
+
+def abstract_opt_state(abs_params, mesh: Mesh, quantized: bool = False,
+                       kahan: bool = False):
+    from repro.train.optim import Quantized
+
+    def moment(p):
+        if not quantized:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                        sharding=p.sharding)
+        spec = p.sharding.spec
+        spec = tuple(spec) + (None,) * (len(p.shape) - len(spec))
+        scale_spec = P(*spec[:-1], None) if len(p.shape) else P()
+        scale_shape = p.shape[:-1] + (1,) if len(p.shape) else (1,)
+        return Quantized(
+            q=_sds(p.shape, jnp.int8, mesh, P(*spec)),
+            scale=_sds(scale_shape, jnp.float32, mesh, scale_spec),
+        )
+
+    comp = None
+    if kahan:
+        comp = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16,
+                                           sharding=p.sharding), abs_params)
+    return AdamState(
+        count=_sds((), jnp.int32, mesh, P()),
+        mu=jax.tree.map(moment, abs_params),
+        nu=jax.tree.map(moment, abs_params),
+        comp=comp,
+    )
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, batch_ax) -> dict:
+    """Spec tree congruent with tfm.init_decode_state output."""
+    plan = tfm.layer_plan(cfg, encoder=False)
+    cycle = tfm.unit_cycle(cfg)
+    n_units = len(plan) // cycle
+    cross = cfg.is_encdec
+    model_ax = _ax(mesh, "model")
+
+    def layer_specs(kind: str) -> dict:
+        st = {}
+        if kind == "attn":
+            st["k"] = P(batch_ax, model_ax, None, None)
+            st["v"] = P(batch_ax, model_ax, None, None)
+            if cross:
+                st["ck"] = P(batch_ax, model_ax, None, None)
+                st["cv"] = P(batch_ax, model_ax, None, None)
+                st["clen"] = P()
+        elif kind == "local":
+            st["k"] = P(batch_ax, None, None, None)
+            st["v"] = P(batch_ax, None, None, None)
+            if cross:
+                st["ck"] = P(batch_ax, model_ax, None, None)
+                st["cv"] = P(batch_ax, model_ax, None, None)
+                st["clen"] = P()
+        elif kind == "rglru":
+            st["h"] = P(batch_ax, model_ax)
+            st["conv"] = P(batch_ax, None, model_ax)
+        elif kind == "rwkv":
+            st["shift"] = P(batch_ax, None, None)
+            st["s"] = P(batch_ax, model_ax, None, None)
+            st["cmix_shift"] = P(batch_ax, None, None)
+        return st
+
+    out: dict = {}
+    if n_units:
+        unit = {f"u{j}": layer_specs(plan[j][0]) for j in range(cycle)}
+        # stacked leading layer dim
+        out["stack"] = jax.tree.map(
+            lambda p: P(None, *p), unit, is_leaf=lambda x: isinstance(x, P))
+    leftover = len(plan) % cycle
+    if leftover:
+        out["extra"] = {f"x{j}": layer_specs(plan[n_units * cycle + j][0])
+                        for j in range(leftover)}
+    return out
+
+
+def abstract_decode_state(cfg: ModelConfig, mesh: Mesh, batch: int,
+                          max_len: int, enc_len: int, batch_ax):
+    shapes = jax.eval_shape(
+        lambda: tfm.init_decode_state(cfg, batch, max_len, enc_len))
+    specs = decode_state_pspecs(cfg, mesh, batch_ax)
+    return jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
+                        shapes, specs,
+                        is_leaf=lambda x: isinstance(x, P)), specs
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+def apply_variant(cfg: ModelConfig, variant: str, mesh: Mesh
+                  ) -> ModelConfig:
+    """Optimizer-produced config variants for the perf pass.
+
+    'padded_heads': paper Eq. 8b scale-up — pad n_heads / n_kv_heads to the
+    TP quantum so attention shards instead of replicating (yi-34b: 56 -> 64
+    heads; the +params are the PG the paper trades for latency).
+    """
+    if variant in ("", "none"):
+        return cfg
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if variant == "padded_heads":
+        nh = -(-cfg.n_heads // tp) * tp
+        nkv = -(-cfg.n_kv_heads // tp) * tp
+        return dataclasses.replace(
+            cfg, name=cfg.name + "+padheads", n_heads=nh, n_kv_heads=nkv)
+    if variant == "seq_parallel":
+        return dataclasses.replace(
+            cfg, name=cfg.name + "+seqpar", seq_parallel_acts=True)
+    raise ValueError(variant)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                  # train | prefill | decode
+    fn: Callable               # function to lower
+    args: tuple                # abstract args
+    donate: tuple = ()
+    rules: dict = dataclasses.field(default_factory=dict)
+    model_flops: float = 0.0   # 6*N*D (train) / 2*N_active*D (inference)
+    note: str = ""
+
+
+def microbatches_for(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     budget_bytes: float = 5e9) -> int:
+    """Grad-accum factor so per-microbatch activations fit the HBM budget.
+
+    Accounts for the three dominant per-token live terms: the residual
+    stream saved per layer under remat, the (vocab-sharded) logits in the
+    loss (bf16 + fp32 temps), and MoE dispatch/combine buffers.
+    """
+    from repro.models.transformer import padded_vocab
+    dp = dp_size(mesh)
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    seqs_per_dev = max(shape.global_batch // max(dp, 1), 1)
+    resid = cfg.d_model * 2 * cfg.n_layers * (2 if cfg.is_encdec else 1)
+    vshard = padded_vocab(cfg)
+    if vshard % tp == 0:
+        vshard //= tp
+    logits = vshard * 6                       # bf16 logits + fp32 temps
+    moe = (cfg.experts_per_token * cfg.d_model * 12) if cfg.moe else 0
+    per_seq = shape.seq_len * (resid + logits + moe)
+    total = per_seq * seqs_per_dev
+    mb = 1
+    while total / mb > budget_bytes and mb < seqs_per_dev:
+        mb *= 2
+    return min(mb, seqs_per_dev)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                tc=None) -> CellSpec:
+    """Build the abstract call for one (arch x shape x mesh) cell."""
+    from repro.train.step import TrainConfig, build_train_step
+    from repro.train.optim import cosine_schedule
+
+    rules = cell_rules(mesh, cfg, shape.global_batch)
+    with shlib.activity(mesh, rules):
+        return _input_specs_inner(cfg, shape, mesh, tc, rules)
+
+
+def _input_specs_inner(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       tc, rules: dict) -> CellSpec:
+    from repro.train.step import TrainConfig, build_train_step
+    from repro.train.optim import cosine_schedule
+
+    batch_ax = shlib.batch_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    n_params = tfm.count_params_analytic(cfg)
+    n_active = tfm.count_params_analytic(cfg, active_only=True)
+
+    if shape.kind == "train":
+        if tc is None:
+            from repro.train.optim import AdamWConfig
+            # 8-bit Adam moments above ~30B params (yi, command-r, llama4);
+            # bf16+Kahan master weights above ~200B (llama4): fp32 master +
+            # fp32 grads alone exceed 16 GiB/chip at 1.55B params/chip.
+            q8 = n_params > 30e9
+            kahan = n_params > 200e9
+            tc = TrainConfig(
+                adamw=AdamWConfig(
+                    quantize_moments=q8,
+                    master_dtype="bf16_kahan" if kahan else "f32"),
+                microbatches=microbatches_for(cfg, mesh, shape),
+                remat="sqrt", moe_strategy="auto",
+                accum_dtype="bf16" if kahan else "f32")
+        kahan = tc.adamw.master_dtype == "bf16_kahan"
+        abs_params, _ = abstract_params(
+            cfg, mesh, dtype=COMPUTE_DTYPE if kahan else None)
+        abs_opt = abstract_opt_state(abs_params, mesh,
+                                     quantized=tc.adamw.quantize_moments,
+                                     kahan=kahan)
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, mesh, P(batch_ax, None)),
+            "labels": _sds((b, s), jnp.int32, mesh, P(batch_ax, None)),
+        }
+        if cfg.is_encdec:
+            batch["src_embeds"] = _sds((b, s, cfg.d_model), COMPUTE_DTYPE,
+                                       mesh, P(batch_ax, None, None))
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = _sds((b, s, 3), jnp.int32, mesh,
+                                      P(batch_ax, None, None))
+        step_idx = _sds((), jnp.int32, mesh, P())
+        lr = cosine_schedule(3e-4, 100, 10000)
+        fn = build_train_step(cfg, tc, lr)
+        return CellSpec(
+            arch=cfg.name, shape=shape.name, kind="train", fn=fn,
+            args=(abs_params, abs_opt, batch, step_idx),
+            donate=(0, 1), rules=rules,
+            model_flops=6.0 * n_active * b * s,
+            note=f"microbatches={tc.microbatches} remat={tc.remat} "
+                 f"adam8bit={tc.adamw.quantize_moments}")
+
+    if shape.kind == "prefill":
+        abs_params, _ = abstract_params(cfg, mesh, dtype=COMPUTE_DTYPE)
+        kw = {}
+        if cfg.is_encdec:
+            kw["src_embeds"] = _sds((b, s, cfg.d_model), COMPUTE_DTYPE,
+                                    mesh, P(batch_ax, None, None))
+        if cfg.rope_kind == "mrope":
+            kw["positions"] = _sds((b, s, 3), jnp.int32, mesh,
+                                   P(batch_ax, None, None))
+        tokens = _sds((b, s), jnp.int32, mesh, P(batch_ax, None))
+        kw_keys = sorted(kw)
+
+        def prefill_fn(params, tokens, *extras):
+            kwargs = dict(zip(kw_keys, extras))
+            logits, states, _ = tfm.forward(
+                params, cfg, tokens=tokens, mode="prefill",
+                moe_strategy="auto", **kwargs)
+            return logits[:, -1], states
+
+        return CellSpec(
+            arch=cfg.name, shape=shape.name, kind="prefill", fn=prefill_fn,
+            args=(abs_params, tokens) + tuple(kw[k] for k in kw_keys),
+            rules=rules,
+            model_flops=2.0 * n_active * b * s,
+            note="returns (last_logits, kv_caches)")
+
+    # decode
+    abs_params, _ = abstract_params(cfg, mesh, dtype=COMPUTE_DTYPE)
+    enc_len = s if cfg.is_encdec else 0
+    abs_state, _ = abstract_decode_state(cfg, mesh, b, s, enc_len, batch_ax)
+    tokens = _sds((b,), jnp.int32, mesh, P(batch_ax))
+    pos = _sds((), jnp.int32, mesh, P())
+    kw_pos = None
+    if cfg.rope_kind == "mrope":
+        kw_pos = _sds((b, 1, 3), jnp.int32, mesh, P(batch_ax, None, None))
+
+    def serve_fn(params, tokens, pos, states, positions=None):
+        return tfm.decode_step(params, cfg, tokens, pos, states,
+                               positions=positions, moe_strategy="auto")
+
+    args = (abs_params, tokens, pos, abs_state)
+    if kw_pos is not None:
+        args = args + (kw_pos,)
+    return CellSpec(
+        arch=cfg.name, shape=shape.name, kind="decode", fn=serve_fn,
+        args=args, donate=(3,), rules=rules,
+        model_flops=2.0 * n_active * b,
+        note=f"one new token against a {s}-token cache")

@@ -1,0 +1,10 @@
+from repro.models.transformer import (
+    init_params, forward, train_loss, decode_step, init_decode_state,
+    encode, count_params_analytic, layer_plan, unit_cycle,
+)
+
+__all__ = [
+    "init_params", "forward", "train_loss", "decode_step",
+    "init_decode_state", "encode", "count_params_analytic", "layer_plan",
+    "unit_cycle",
+]

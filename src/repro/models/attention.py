@@ -1,0 +1,335 @@
+"""Attention: GQA, causal/local/bidirectional/cross, prefill + decode.
+
+Three execution paths:
+  * ``chunked_attention`` — flash-style online-softmax over KV chunks in pure
+    jnp (lax.scan).  Memory-safe at 32k context; the dry-run lowers this.
+    On TPU runtime, ops.py dispatches to the Pallas flash kernel instead.
+  * ``decode_attention`` — single-token attention against a full cache
+    (single-device / replicated path).
+  * ``flash_decode_sharded`` — sequence-parallel decode: the KV cache is
+    sharded along *sequence* over the ``model`` mesh axis; each shard
+    computes partial softmax stats over its chunk and the result is combined
+    with pmax/psum (flash-decoding), inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import COMPUTE_DTYPE, PARAM_DTYPE, cast, dense_init
+from repro.parallel.sharding import (
+    shard, current_mesh, logical_to_pspec, batch_axes,
+)
+
+NEG_INF = -1e30
+
+
+def _vmem_scope(name, fn):
+    """Tag a region whose intermediates are VMEM-resident in the Pallas
+    kernel (ops.py) — the loop-aware byte model skips their HBM traffic."""
+    from functools import wraps
+
+    @wraps(fn)
+    def wrapped(*a, **k):
+        with jax.named_scope(name):
+            return fn(*a, **k)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   bias: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads, head_dim),
+                         in_axis_size=d_model),
+        "wk": dense_init(ks[1], (d_model, n_kv, head_dim),
+                         in_axis_size=d_model),
+        "wv": dense_init(ks[2], (d_model, n_kv, head_dim),
+                         in_axis_size=d_model),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d_model),
+                         in_axis_size=n_heads * head_dim),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((n_kv, head_dim), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((n_kv, head_dim), PARAM_DTYPE)
+    return p
+
+
+def qkv_proj(p: dict, x: jax.Array):
+    q = jnp.einsum("...d,dhk->...hk", x, cast(p["wq"]))
+    k = jnp.einsum("...d,dhk->...hk", x, cast(p["wk"]))
+    v = jnp.einsum("...d,dhk->...hk", x, cast(p["wv"]))
+    if "bq" in p:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def kv_proj(p: dict, x: jax.Array):
+    k = jnp.einsum("...d,dhk->...hk", x, cast(p["wk"]))
+    v = jnp.einsum("...d,dhk->...hk", x, cast(p["wv"]))
+    if "bk" in p:
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    return k, v
+
+
+def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    out = jnp.einsum("...hk,hkd->...d", o, cast(p["wo"]))
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (reference path; lowered in the dry-run)
+# ---------------------------------------------------------------------------
+def _chunk_sizes(sq: int, skv: int, q_chunk: int, kv_chunk: int):
+    qc = min(q_chunk, sq)
+    while sq % qc:
+        qc //= 2
+    kc = min(kv_chunk, skv)
+    while skv % kc:
+        kc //= 2
+    return max(qc, 1), max(kc, 1)
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, H, dh)
+    k: jax.Array,            # (B, Skv, KV, dh)
+    v: jax.Array,            # (B, Skv, KV, dh)
+    *,
+    mask_kind: str = "causal",     # causal | local | none
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,   # valid kv length (ragged masking)
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; returns (B, Sq, H, dh)."""
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    qc, kc = _chunk_sizes(sq, skv, q_chunk, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+
+    qr = q.reshape(b, nq, qc, kv, g, dh).astype(COMPUTE_DTYPE)
+    kr = k.reshape(b, nk, kc, kv, dh).astype(COMPUTE_DTYPE)
+    vr = v.reshape(b, nk, kc, kv, dh).astype(COMPUTE_DTYPE)
+
+    q_pos_base = q_offset + jnp.arange(nq) * qc            # (nq,)
+    k_pos_base = jnp.arange(nk) * kc                       # (nk,)
+
+    @jax.checkpoint
+    @partial(_vmem_scope, "vmem_resident_flash")
+    def q_step(_, qi):
+        # Rematted: the backward pass recomputes per-chunk probabilities
+        # from the (tiny) chunk inputs instead of saving the (qc, kc)
+        # score/probability blocks of every chunk pair — this is what makes
+        # the pure-jnp path flash-like in memory, not just compute.
+        qblk, qpos0 = qi                                   # (b,qc,kv,g,dh)
+        qpos = qpos0 + jnp.arange(qc)                      # (qc,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kpos0 = ki
+            kpos = kpos0 + jnp.arange(kc)                  # (kc,)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if mask_kind in ("causal", "local"):
+                mask &= kpos[None, :] <= qpos[:, None]
+            if mask_kind == "local" and window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            if kv_len is not None:
+                mask &= kpos[None, :] < kv_len
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))    # (b,kv,g,qc)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd",
+                            p.astype(COMPUTE_DTYPE), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+             k_pos_base))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]         # (b,kv,g,qc,dh)
+        return None, o
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qr.transpose(1, 0, 2, 3, 4, 5), q_pos_base))
+    # outs: (nq, b, kv, g, qc, dh) -> (b, sq, h, dh)
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dh)
+    return o.astype(COMPUTE_DTYPE)
+
+
+def local_attention_prefill(q, k, v, *, window: int, q_offset: int = 0,
+                            q_chunk: int = 1024) -> jax.Array:
+    """Sliding-window attention that only touches the window's KV chunks.
+
+    For each query chunk we slice a (window + q_chunk) KV strip — total work
+    O(S * window) rather than O(S^2) — the sub-quadratic path that makes
+    long_500k viable for recurrentgemma.
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    qc, _ = _chunk_sizes(sq, skv, q_chunk, q_chunk)
+    strip = min(skv, window + qc)
+    if strip >= skv:
+        return chunked_attention(q, k, v, mask_kind="local", window=window,
+                                 q_offset=q_offset)
+    nq = sq // qc
+    qr = q.reshape(b, nq, qc, h, dh)
+
+    @partial(_vmem_scope, "vmem_resident_flash_local")
+    def q_step(_, qi):
+        qblk, idx = qi
+        qpos0 = q_offset + idx * qc
+        start = jnp.clip(qpos0 + qc - strip, 0, skv - strip)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, strip, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, strip, axis=1)
+        g = h // kv
+        scale = 1.0 / math.sqrt(dh)
+        s = jnp.einsum("bqkgd,bckd->bkgqc",
+                       qblk.reshape(b, qc, kv, g, dh).astype(COMPUTE_DTYPE),
+                       ks.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32) * scale
+        qpos = qpos0 + jnp.arange(qc)[:, None]
+        kpos = start + jnp.arange(strip)[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(COMPUTE_DTYPE), vs,
+                       preferred_element_type=jnp.float32)
+        return None, o.reshape(b, qc, h, dh).astype(COMPUTE_DTYPE)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qr.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
+    """Single-token attention, replicated cache.  q: (B, H, dh)."""
+    b, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bkgd,bskd->bkgs",
+                   q.reshape(b, kv, g, dh).astype(COMPUTE_DTYPE),
+                   k_cache.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, :] < cache_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(COMPUTE_DTYPE),
+                   v_cache.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, dh).astype(COMPUTE_DTYPE)
+
+
+def _dp_axes(mesh: Mesh):
+    return batch_axes(mesh)
+
+
+def flash_decode_sharded(q, k_cache, v_cache, cache_len, mesh: Mesh,
+                         seq_axis: str = "model") -> jax.Array:
+    """Sequence-parallel decode attention (flash-decoding on the mesh).
+
+    q:        (B, H, dh)      — batch over data axes, replicated over model
+    caches:   (B, S, KV, dh)  — batch over data axes, S sharded over `model`
+    Each model-shard computes partial (m, l, o) over its local S chunk; the
+    global softmax is reconstructed with pmax/psum.
+    """
+    if seq_axis not in mesh.axis_names:
+        return decode_attention(q, k_cache, v_cache, cache_len)
+    n_shards = mesh.shape[seq_axis]
+    s_total = k_cache.shape[1]
+    s_loc = s_total // n_shards
+    dp = _dp_axes(mesh)
+
+    def f(qb, kb, vb, clen):
+        b, h, dh = qb.shape
+        kv = kb.shape[2]
+        g = h // kv
+        scale = 1.0 / math.sqrt(dh)
+        off = jax.lax.axis_index(seq_axis) * s_loc
+        pos = off + jnp.arange(s_loc)
+        valid = pos < clen
+        s = jnp.einsum("bkgd,bskd->bkgs",
+                       qb.reshape(b, kv, g, dh).astype(COMPUTE_DTYPE),
+                       kb.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m_loc = jnp.maximum(jnp.max(s, axis=-1), NEG_INF)   # (b,kv,g)
+        p = jnp.exp(s - m_loc[..., None])
+        p = jnp.where(valid[None, None, None, :], p, 0.0)
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bkgs,bskd->bkgd", p.astype(COMPUTE_DTYPE),
+                           vb.astype(COMPUTE_DTYPE),
+                           preferred_element_type=jnp.float32)
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        corr = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(l_loc * corr, seq_axis)
+        o = jax.lax.psum(o_loc * corr[..., None], seq_axis)
+        o = o / jnp.maximum(l_glob, 1e-30)[..., None]
+        return o.reshape(b, h, dh).astype(COMPUTE_DTYPE)
+
+    return jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, seq_axis, None, None),
+                  P(dp, seq_axis, None, None), P()),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, cache_len)
+
+
+def update_cache_sharded(cache, new, pos, mesh: Optional[Mesh],
+                         seq_axis: str = "model"):
+    """Write (B, KV, dh) `new` at sequence position `pos` of a seq-sharded
+    cache (B, S, KV, dh).  Only the owning shard commits the write."""
+    if mesh is None or seq_axis not in mesh.axis_names:
+        return jax.lax.dynamic_update_slice(
+            cache, new[:, None].astype(cache.dtype), (0, pos, 0, 0))
+    n_shards = mesh.shape[seq_axis]
+    s_loc = cache.shape[1] // n_shards
+    dp = _dp_axes(mesh)
+
+    def f(c, n, p):
+        off = jax.lax.axis_index(seq_axis) * s_loc
+        i = p - off
+        inb = (i >= 0) & (i < s_loc)
+        i_c = jnp.clip(i, 0, s_loc - 1)
+        upd = jax.lax.dynamic_update_slice(
+            c, n[:, None].astype(c.dtype), (0, i_c, 0, 0))
+        return jnp.where(inb, upd, c)
+
+    return jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(P(dp, seq_axis, None, None), P(dp, None, None), P()),
+        out_specs=P(dp, seq_axis, None, None),
+        check_vma=False,
+    )(cache, new, pos)

@@ -1,0 +1,173 @@
+"""Small VGG-style convnet — the paper's Table 2 testbed (VGG16/CIFAR10),
+at reproducible scale.  Width-configurable per conv layer so the pruning
+baselines (HRank/SOFT) and the tail-effect optimizer can resize it.
+
+On TPU a conv lowers to an im2col matmul: (B*H*W, kh*kw*Cin) @ (.., Cout) —
+so the wave-quantization LayerShape for conv layer i is
+    tokens = B*H_i*W_i, d_in = kh*kw*Cin_i, width = Cout_i
+which is exactly the mapping benchmarks/pruning_opt.py uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import PARAM_DTYPE, dense_init
+
+# Conv widths straddle lane-tile (128) boundaries so the staircase has
+# stairs to climb — mirroring VGG16's 64..512 filter range (paper Table 2).
+DEFAULT_WIDTHS = (128, 192, 320, 448)
+
+
+def conv_names(widths=None) -> list:
+    widths = widths or DEFAULT_WIDTHS
+    return [f"conv{i}" for i in range(len(widths))]
+
+
+def init_convnet(key, widths=None, n_classes: int = 10,
+                 in_channels: int = 3, image: int = 32) -> dict:
+    widths = tuple(widths or DEFAULT_WIDTHS)
+    params: dict = {}
+    cin = in_channels
+    for i, w in enumerate(widths):
+        k = jax.random.fold_in(key, i)
+        params[f"conv{i}"] = {
+            "kernel": dense_init(k, (3, 3, cin, w),
+                                 in_axis_size=9 * cin),
+            "bias": jnp.zeros((w,), PARAM_DTYPE),
+        }
+        cin = w
+    # spatial: pool /2 after every 2 convs
+    n_pools = len(widths) // 2
+    feat = image // (2 ** n_pools)
+    params["head"] = {
+        "w": dense_init(jax.random.fold_in(key, 99),
+                        (feat * feat * cin, n_classes)),
+        "b": jnp.zeros((n_classes,), PARAM_DTYPE),
+    }
+    return params
+
+
+def forward_convnet(params: dict, x: jax.Array,
+                    collect_acts: bool = False):
+    """x: (B, H, W, C) float32.  Returns (logits, acts dict)."""
+    acts = {}
+    i = 0
+    while f"conv{i}" in params:
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["kernel"].astype(x.dtype), window_strides=(1, 1),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["bias"].astype(x.dtype))
+        if collect_acts:
+            acts[f"conv{i}"] = x
+        if i % 2 == 1:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+        i += 1
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    logits = x @ params["head"]["w"].astype(x.dtype) \
+        + params["head"]["b"].astype(x.dtype)
+    return logits, acts
+
+
+def convnet_loss(params, batch):
+    logits, _ = forward_convnet(params, batch["images"])
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, batch["labels"][:, None], 1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(lf, -1) == batch["labels"]).astype(
+        jnp.float32))
+    return loss, acc
+
+
+def prune_convnet(params: dict, indices: dict) -> dict:
+    """Structured prune: keep the given output-filter indices per layer,
+    slicing the next layer's input channels to match."""
+    out = {}
+    prev_keep = None
+    i = 0
+    while f"conv{i}" in params:
+        p = params[f"conv{i}"]
+        kern = p["kernel"]
+        if prev_keep is not None:
+            kern = kern[:, :, prev_keep, :]
+        keep = indices.get(f"conv{i}")
+        if keep is not None:
+            kern = kern[..., keep]
+            bias = p["bias"][keep]
+            prev_keep = np.asarray(keep)
+        else:
+            bias = p["bias"]
+            prev_keep = None
+        out[f"conv{i}"] = {"kernel": kern, "bias": bias}
+        i += 1
+    # head input: channels interleaved with spatial dims (feat*feat*C)
+    head_w = params["head"]["w"]
+    if prev_keep is not None:
+        cin_old = params[f"conv{i-1}"]["kernel"].shape[-1]
+        spatial = head_w.shape[0] // cin_old
+        hw = head_w.reshape(spatial, cin_old, -1)[:, prev_keep]
+        head_w = hw.reshape(spatial * len(prev_keep), -1)
+    out["head"] = {"w": head_w, "b": params["head"]["b"]}
+    return out
+
+
+def synthetic_cifar(step: int, batch: int = 64, image: int = 32,
+                    n_classes: int = 10, seed: int = 0):
+    """Learnable synthetic image task: class k = base pattern k + noise."""
+    rng = np.random.default_rng((seed, step))
+    base = np.random.default_rng(1234).standard_normal(
+        (n_classes, image, image, 3)).astype(np.float32)
+    labels = rng.integers(0, n_classes, size=(batch,))
+    images = base[labels] + 0.8 * rng.standard_normal(
+        (batch, image, image, 3)).astype(np.float32)
+    return {"images": jnp.asarray(images),
+            "labels": jnp.asarray(labels.astype(np.int32))}
+
+
+def conv_layer_shapes(widths, batch: int = 64, image: int = 32,
+                      in_channels: int = 3, shard: int = 1):
+    """LayerShape list for the tail model (im2col mapping)."""
+    from repro.core.tail_model import LayerShape
+    out = []
+    cin = in_channels
+    hw = image
+    for i, w in enumerate(widths):
+        out.append(LayerShape(
+            name=f"conv{i}", tokens=batch * hw * hw, d_in=9 * cin,
+            width=w, shard_out=shard))
+        cin = w
+        if i % 2 == 1:
+            hw //= 2
+    return out
+
+
+def count_conv_params(widths, in_channels: int = 3, image: int = 32,
+                      n_classes: int = 10) -> int:
+    total = 0
+    cin = in_channels
+    for i, w in enumerate(widths):
+        total += 9 * cin * w + w
+        cin = w
+    feat = image // (2 ** (len(widths) // 2))
+    total += feat * feat * cin * n_classes + n_classes
+    return total
+
+
+def count_conv_flops(widths, batch: int = 1, image: int = 32,
+                     in_channels: int = 3) -> float:
+    total = 0.0
+    cin = in_channels
+    hw = image
+    for i, w in enumerate(widths):
+        total += 2.0 * batch * hw * hw * 9 * cin * w
+        cin = w
+        if i % 2 == 1:
+            hw //= 2
+    return total

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts: top-k routing with capacity, EP over the model axis.
+
+Two execution strategies:
+  * ``dense``    — every expert computes every token, gated combine.  Exact,
+    used for tiny smoke configs and as the routing oracle in tests.
+  * ``capacity`` — sort-based dispatch to per-expert capacity buffers
+    (grouped GEMM), token dropping beyond capacity.  Inside ``shard_map``
+    the experts are sharded over the ``model`` axis (expert parallelism) and
+    the expert weights' d_model dim is sharded over ``data`` (FSDP) and
+    all-gathered in bf16 at use; outputs psum over the model axis.
+
+Routing semantics (both paths): softmax router in fp32, top-k, gate
+renormalization over the selected experts, Switch-style load-balance aux
+loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import COMPUTE_DTYPE, PARAM_DTYPE, cast, dense_init
+from repro.parallel.sharding import shard, batch_axes
+
+
+def init_moe(key, d_model: int, n_experts: int, moe_d_ff: int,
+             shared: bool, d_ff_shared: int) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts)),
+        "experts": {
+            "w_gate": dense_init(ks[1], (n_experts, d_model, moe_d_ff),
+                                 in_axis_size=d_model),
+            "w_up": dense_init(ks[2], (n_experts, d_model, moe_d_ff),
+                               in_axis_size=d_model),
+            "w_down": dense_init(ks[3], (n_experts, moe_d_ff, d_model),
+                                 in_axis_size=moe_d_ff),
+        },
+    }
+    if shared:
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (d_model, d_ff_shared)),
+            "w_up": dense_init(ks[5], (d_model, d_ff_shared)),
+            "w_down": dense_init(jax.random.fold_in(key, 9),
+                                 (d_ff_shared, d_model),
+                                 in_axis_size=d_ff_shared),
+        }
+    return p
+
+
+def route(p: dict, x: jax.Array, k: int):
+    """Router: returns (gates (..., k) fp32, ids (..., k) int32, aux dict)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    e = logits.shape[-1]
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs.reshape(-1, e), axis=0)
+    assign = jax.nn.one_hot(ids.reshape(-1, k), e, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(assign, axis=1), axis=0) / k
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gates, ids, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def _expert_ffn(w, h_in):
+    """h_in: (E, C, D); w: expert weight dict -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", h_in, w["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h_in, w["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w["w_down"])
+
+
+def _shared_ffn(p, x):
+    g = jnp.einsum("...d,df->...f", x, cast(p["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, cast(p["w_up"]))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, cast(p["w_down"]))
+
+
+# ---------------------------------------------------------------------------
+# dense strategy (oracle / tiny configs)
+# ---------------------------------------------------------------------------
+def apply_moe_dense(p: dict, x: jax.Array, k: int):
+    gates, ids, aux = route(p, x, k)
+    e = p["router"].shape[-1]
+    w = p["experts"]
+    g_ = jnp.einsum("...d,edf->...ef", x, cast(w["w_gate"]))
+    u_ = jnp.einsum("...d,edf->...ef", x, cast(w["w_up"]))
+    h = jax.nn.silu(g_) * u_
+    y_all = jnp.einsum("...ef,efd->...ed", h, cast(w["w_down"]))
+    combine = jnp.sum(
+        jax.nn.one_hot(ids, e, dtype=jnp.float32) * gates[..., None], axis=-2)
+    y = jnp.einsum("...ed,...e->...d", y_all.astype(jnp.float32), combine)
+    y = y.astype(x.dtype)
+    if "shared" in p:
+        y = y + _shared_ffn(p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# capacity strategy (production; optional EP via shard_map)
+# ---------------------------------------------------------------------------
+def _capacity(tokens: int, k: int, n_experts: int, cf: float) -> int:
+    c = int(tokens * k * cf / n_experts) + 1
+    return max(c, 1)
+
+
+def _dispatch_compute_combine(x_flat, ids, gates, w_gate, w_up, w_down,
+                              e_lo: int, e_local: int, n_experts: int,
+                              capacity: int):
+    """Sort-based capacity dispatch for experts [e_lo, e_lo + e_local).
+
+    x_flat: (T, D); ids/gates: (T, k).  Returns (T, D) contribution of the
+    local experts only (tokens routed elsewhere contribute zero).
+    """
+    t, d = x_flat.shape
+    k = ids.shape[-1]
+    tk = t * k
+    flat_ids = ids.reshape(tk)
+    flat_gates = gates.reshape(tk)
+    local = (flat_ids >= e_lo) & (flat_ids < e_lo + e_local)
+    local_ids = jnp.where(local, flat_ids - e_lo, e_local)   # e_local = trash
+    perm = jnp.argsort(local_ids, stable=True)
+    sorted_ids = local_ids[perm]
+    # position within expert: index in sorted order minus the expert's start
+    counts = jnp.bincount(sorted_ids, length=e_local + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)])[:-1]
+    pos_in_e = jnp.arange(tk) - starts[sorted_ids]
+    keep = (sorted_ids < e_local) & (pos_in_e < capacity)
+    dest = jnp.where(keep, sorted_ids * capacity + pos_in_e,
+                     e_local * capacity)                      # trash row
+    src_token = perm // k
+    buf = jnp.zeros((e_local * capacity + 1, d), x_flat.dtype)
+    buf = buf.at[dest].set(x_flat[src_token], mode="drop")
+    h_in = buf[:-1].reshape(e_local, capacity, d)
+    h_out = _expert_ffn({"w_gate": w_gate, "w_up": w_up, "w_down": w_down},
+                        h_in)
+    out_flat = jnp.concatenate(
+        [h_out.reshape(e_local * capacity, d),
+         jnp.zeros((1, d), h_out.dtype)], axis=0)
+    y_sorted = out_flat[dest] * flat_gates[perm][:, None].astype(h_out.dtype)
+    # unsort and combine over k
+    y_tk = jnp.zeros((tk, d), h_out.dtype).at[perm].set(y_sorted)
+    return jnp.sum(y_tk.reshape(t, k, d), axis=1)
+
+
+def apply_moe_capacity(p: dict, x: jax.Array, k: int, capacity_factor: float,
+                       mesh: Optional[Mesh] = None, ep_axis: str = "model"):
+    """Capacity-dispatch MoE.  x: (B, S, D).  EP over `ep_axis` if a mesh
+    with that axis is supplied (experts already sharded there by the param
+    specs); FSDP all-gather of expert weights over 'data' happens inside."""
+    b, s, d = x.shape
+    n_experts = p["router"].shape[-1]
+    gates, ids, aux = route(p, x, k)
+    x_flat = x.reshape(b * s, d)
+    ids_f = ids.reshape(b * s, k)
+    gates_f = gates.reshape(b * s, k).astype(COMPUTE_DTYPE)
+
+    w = p["experts"]
+
+    use_ep = (mesh is not None and ep_axis in mesh.axis_names
+              and n_experts % mesh.shape[ep_axis] == 0)
+    if not use_ep:
+        cap = _capacity(b * s, k, n_experts, capacity_factor)
+        y = _dispatch_compute_combine(
+            x_flat, ids_f, gates_f, cast(w["w_gate"]), cast(w["w_up"]),
+            cast(w["w_down"]), 0, n_experts, n_experts, cap)
+        y = y.reshape(b, s, d)
+    else:
+        ep = mesh.shape[ep_axis]
+        e_local = n_experts // ep
+        dp = batch_axes(mesh)
+        dp_n = 1
+        for a in ((dp,) if isinstance(dp, str) else (dp or ())):
+            dp_n *= mesh.shape[a]
+        # capacity is per-expert over the tokens each shard actually sees
+        cap = _capacity(max(b * s // dp_n, 1), k, n_experts,
+                        capacity_factor)
+        fsdp = "data" if "data" in mesh.axis_names else None
+
+        def f(xb, idb, gb, wg, wu, wd):
+            # xb: (T_loc, D) — local batch shard, replicated over model.
+            # wg/wu/wd: local experts, d_model sharded over data -> gather.
+            if fsdp is not None:
+                wg = jax.lax.all_gather(wg.astype(COMPUTE_DTYPE), fsdp,
+                                        axis=1, tiled=True)
+                wu = jax.lax.all_gather(wu.astype(COMPUTE_DTYPE), fsdp,
+                                        axis=1, tiled=True)
+                wd = jax.lax.all_gather(wd.astype(COMPUTE_DTYPE), fsdp,
+                                        axis=2, tiled=True)
+            else:
+                wg, wu, wd = (a.astype(COMPUTE_DTYPE) for a in (wg, wu, wd))
+            e_lo = jax.lax.axis_index(ep_axis) * e_local
+            y = _dispatch_compute_combine(xb, idb, gb, wg, wu, wd,
+                                          e_lo, e_local, n_experts, cap)
+            return jax.lax.psum(y, ep_axis)
+
+        y = jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(dp, None), P(dp, None), P(dp, None),
+                      P(ep_axis, fsdp, None), P(ep_axis, fsdp, None),
+                      P(ep_axis, None, fsdp)),
+            out_specs=P(dp, None),
+            check_vma=False,
+        )(x_flat, ids_f, gates_f, w["w_gate"], w["w_up"], w["w_down"])
+        y = y.reshape(b, s, d)
+
+    y = y.astype(x.dtype)
+    if "shared" in p:
+        y = y + _shared_ffn(p["shared"], x)
+    return shard(y, "batch", "seq", "embed"), aux
+
+
+def apply_moe(p: dict, x: jax.Array, k: int, capacity_factor: float,
+              strategy: str = "auto", mesh: Optional[Mesh] = None):
+    if strategy == "dense":
+        return apply_moe_dense(p, x, k)
+    if strategy == "capacity" or (strategy == "auto" and mesh is not None):
+        return apply_moe_capacity(p, x, k, capacity_factor, mesh)
+    return apply_moe_dense(p, x, k)

@@ -1,0 +1,353 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both provide three execution forms:
+  * parallel-in-time for train/prefill — associative scan (RG-LRU) or
+    chunked per-channel-decay linear attention (RWKV6), with lax.scan over
+    chunks so the lowered HLO stays small;
+  * single-step for decode — O(1) carried state;
+  * a pure sequential reference (tests assert the fast forms match it).
+
+Conventions (the ref defines the semantics; the Pallas kernels must match):
+  RG-LRU:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+           a_t = exp(-c * softplus(L) * r_t),  c = 8
+  RWKV6:   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+           o_t = r_t @ (diag(w_t) S_{t-1} + (u * k_t)^T v_t)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    COMPUTE_DTYPE, PARAM_DTYPE, apply_norm, cast, dense_init, init_norm,
+)
+from repro.parallel.sharding import shard
+
+RG_C = 8.0
+CONV_K = 4
+
+
+# ===========================================================================
+# RG-LRU (Griffin recurrent block)
+# ===========================================================================
+def init_rglru(key, d_model: int, width: Optional[int] = None) -> dict:
+    w = width or d_model
+    ks = jax.random.split(key, 6)
+    # a_param initialized so a^c in (0.9, 0.999) at r=1 (paper's Lambda init)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9**2, 0.999**2)
+    a_param = jnp.log(jnp.exp(-jnp.log(u) / (2 * RG_C)) - 1.0)
+    return {
+        "w_x": dense_init(ks[1], (d_model, w)),
+        "w_gate": dense_init(ks[2], (d_model, w)),
+        "w_out": dense_init(ks[3], (w, d_model), in_axis_size=w),
+        "conv_w": dense_init(ks[4], (CONV_K, w), in_axis_size=CONV_K),
+        "conv_b": jnp.zeros((w,), PARAM_DTYPE),
+        "a_param": a_param.astype(PARAM_DTYPE),
+        "in_gate_w": dense_init(ks[5], (w,), in_axis_size=1),
+        "in_gate_b": jnp.zeros((w,), PARAM_DTYPE),
+        "rec_gate_w": dense_init(jax.random.fold_in(key, 7), (w,),
+                                 in_axis_size=1),
+        "rec_gate_b": jnp.zeros((w,), PARAM_DTYPE),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Width-CONV_K causal depthwise conv over time.  x: (B, T, W).
+
+    Returns (y, new_state) where state is the trailing CONV_K-1 inputs.
+    """
+    btw = x
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, btw], axis=1)              # (B, T+K-1, W)
+    y = sum(xp[:, i:i + x.shape[1]] * cast(w[i]) for i in range(CONV_K))
+    y = y + cast(b)
+    new_state = xp[:, -(CONV_K - 1):]
+    return y, new_state
+
+
+def _rglru_gates(p: dict, x: jax.Array):
+    """Per-channel input & recurrence gates and log-decay."""
+    xf = x.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(xf * p["in_gate_w"] + p["in_gate_b"])
+    r_gate = jax.nn.sigmoid(xf * p["rec_gate_w"] + p["rec_gate_b"])
+    log_a = -RG_C * jax.nn.softplus(p["a_param"]) * r_gate   # <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    gated_x = i_gate * xf
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * gated_x
+
+
+def rglru_scan(p: dict, x: jax.Array, h0: Optional[jax.Array] = None):
+    """Parallel-in-time RG-LRU via associative scan.  x: (B, T, W) fp32 in.
+
+    Returns (y (B,T,W), h_last (B,W)).
+    """
+    a, b = _rglru_gates(p, x)                              # (B,T,W) fp32
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0 contribution.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        with jax.named_scope("vmem_resident_rglru"):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(COMPUTE_DTYPE), h[:, -1]
+
+
+def rglru_step(p: dict, x_t: jax.Array, h: jax.Array):
+    """One decode step.  x_t: (B, W); h: (B, W) fp32 state."""
+    a, b = _rglru_gates(p, x_t[:, None])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(COMPUTE_DTYPE), h_new
+
+
+def rglru_ref(p: dict, x: jax.Array, h0: Optional[jax.Array] = None):
+    """Sequential oracle (tests)."""
+    b_, t, w = x.shape
+    h = jnp.zeros((b_, w), jnp.float32) if h0 is None else h0
+
+    def step(h, xt):
+        y, h = rglru_step(p, xt, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), h
+
+
+def apply_rglru_block(p: dict, x: jax.Array, *, state: Optional[dict] = None,
+                      decode: bool = False):
+    """Full Griffin recurrent block: x -> (in-proj, conv, RG-LRU) * gate.
+
+    x: (B, T, D) (T=1 for decode).  state: {"h": (B,W), "conv": (B,K-1,W)}.
+    Returns (out (B,T,D), new_state).
+    """
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, cast(p["w_gate"])))
+    xin = jnp.einsum("btd,dw->btw", x, cast(p["w_x"]))
+    xin = shard(xin, "batch", "seq", "mlp")
+    gate = shard(gate, "batch", "seq", "mlp")
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    if decode:
+        h0 = state["h"]
+        y, h = rglru_step(p, xc[:, 0], h0)
+        y = y[:, None]
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h = rglru_scan(p, xc, h0)
+    out = jnp.einsum("btw,wd->btd", y * gate, cast(p["w_out"]))
+    return shard(out, "batch", "seq", "embed"), {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(batch: int, width: int) -> dict:
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_K - 1, width), COMPUTE_DTYPE)}
+
+
+# ===========================================================================
+# RWKV6 time-mix + channel-mix
+# ===========================================================================
+def init_rwkv(key, d_model: int, n_heads: int, head_dim: int, d_ff: int
+              ) -> dict:
+    ks = jax.random.split(key, 12)
+    lora = 64
+    tm = {
+        "w_r": dense_init(ks[0], (d_model, n_heads, head_dim),
+                          in_axis_size=d_model),
+        "w_k": dense_init(ks[1], (d_model, n_heads, head_dim),
+                          in_axis_size=d_model),
+        "w_v": dense_init(ks[2], (d_model, n_heads, head_dim),
+                          in_axis_size=d_model),
+        "w_g": dense_init(ks[3], (d_model, n_heads, head_dim),
+                          in_axis_size=d_model),
+        "w_o": dense_init(ks[4], (n_heads, head_dim, d_model),
+                          in_axis_size=n_heads * head_dim),
+        # base decay: softplus-ish negative so w = exp(-exp(.)) in (0, 1)
+        "decay_w": jnp.full((n_heads, head_dim), -1.0, PARAM_DTYPE),
+        "decay_lora_a": dense_init(ks[5], (d_model, lora)),
+        "decay_lora_b": (jax.random.normal(ks[6], (lora, n_heads, head_dim),
+                                           jnp.float32) * 0.01
+                         ).astype(PARAM_DTYPE),
+        "bonus_u": (jax.random.normal(ks[7], (n_heads, head_dim),
+                                      jnp.float32) * 0.1).astype(PARAM_DTYPE),
+        "mix_r": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "mix_k": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "mix_v": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "mix_g": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "mix_w": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "ln_x": init_norm("layernorm", n_heads * head_dim),
+    }
+    cm = {
+        "w_in": dense_init(ks[8], (d_model, d_ff)),
+        "w_out": dense_init(ks[9], (d_ff, d_model), in_axis_size=d_ff),
+        "w_r": dense_init(ks[10], (d_model, d_model)),
+        "mix_c": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+        "mix_rc": jnp.full((d_model,), 0.5, PARAM_DTYPE),
+    }
+    return {"rwkv": tm, "cmix": cm}
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x: (B,T,D) -> value of the previous token (B,T,D), plus new carry."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _mix(x, shifted, m):
+    m = cast(m)
+    return x * m + shifted * (1.0 - m)
+
+
+def _rwkv_rkvwg(p: dict, x: jax.Array, shifted: jax.Array):
+    xr = _mix(x, shifted, p["mix_r"])
+    xk = _mix(x, shifted, p["mix_k"])
+    xv = _mix(x, shifted, p["mix_v"])
+    xg = _mix(x, shifted, p["mix_g"])
+    xw = _mix(x, shifted, p["mix_w"])
+    r = jnp.einsum("btd,dhk->bthk", xr, cast(p["w_r"]))
+    k = jnp.einsum("btd,dhk->bthk", xk, cast(p["w_k"]))
+    v = jnp.einsum("btd,dhk->bthk", xv, cast(p["w_v"]))
+    g = jnp.einsum("btd,dhk->bthk", xg, cast(p["w_g"]))
+    # data-dependent decay (fp32 for stability)
+    dd = jnp.einsum("btd,dl->btl", xw.astype(jnp.float32),
+                    p["decay_lora_a"])
+    dd = jnp.einsum("btl,lhk->bthk", jnp.tanh(dd), p["decay_lora_b"])
+    log_w = -jnp.exp(jnp.clip(p["decay_w"] + dd, -8.0, 4.0))  # < 0
+    return r, k, v, g, log_w
+
+
+def rwkv_ref(r, k, v, log_w, u, s0=None):
+    """Sequential oracle.  r/k/v/log_w: (B,T,H,K); u: (H,K).
+
+    Returns (o (B,T,H,K) fp32, S (B,H,K,K) fp32).
+    """
+    b, t, h, dk = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(log_w)
+    s = jnp.zeros((b, h, dk, dk), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # (B,H,K)
+        s_dec = wt[..., None] * s
+        o = jnp.einsum("bhk,bhkj->bhj", rt, s_dec)
+        o = o + jnp.einsum("bhk,hk,bhk,bhj->bhj", rt, u, kt, vt)
+        s_new = s_dec + jnp.einsum("bhk,bhj->bhkj", kt, vt)
+        return s_new, o
+
+    s, os_ = jax.lax.scan(
+        step, s, (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+                  vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)))
+    return os_.transpose(1, 0, 2, 3), s
+
+
+def rwkv_chunked(r, k, v, log_w, u, s0=None, chunk: int = 32):
+    """Chunked parallel form; exact (matches rwkv_ref to fp32 tolerance).
+
+    All pairwise decays are exp of non-positive numbers — numerically safe
+    regardless of how small per-step decay gets.
+    """
+    b, t, h, dk = r.shape
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+    n = t // c
+    rf = r.astype(jnp.float32).reshape(b, n, c, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, n, c, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, n, c, h, dk)
+    lw = log_w.astype(jnp.float32).reshape(b, n, c, h, dk)
+    uf = u.astype(jnp.float32)
+    s = jnp.zeros((b, h, dk, dk), jnp.float32) if s0 is None else s0
+
+    idx = jnp.arange(c)
+    tri = idx[:, None] > idx[None, :]                       # strict lower
+
+    def chunk_step(s, inp):
+        from repro.models.attention import _vmem_scope
+        return _vmem_scope("vmem_resident_rwkv", _chunk_step_inner)(s, inp)
+
+    def _chunk_step_inner(s, inp):
+        rc, kc, vc, lwc = inp                               # (B,C,H,K)
+        le = jnp.cumsum(lwc, axis=1)                        # inclusive logs
+        # pairwise decay exp(le_i - le_j) for j < i  (exp of <= 0)
+        diff = le[:, :, None] - le[:, None, :]              # (B,C,C,H,K)
+        A = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        intra = jnp.einsum("bihd,bjhd,bijhd->bhij", rc, kc, A)
+        diag = jnp.einsum("bihd,hd,bihd->bhi", rc, uf, kc)
+        intra = intra + diag[..., None] * jnp.eye(c)
+        o = jnp.einsum("bhij,bjhd->bihd", intra, vc)
+        # state contribution: r_i * e_i @ S
+        o = o + jnp.einsum("bihd,bhdj->bihj", rc * jnp.exp(le), s)
+        # state update
+        le_c = le[:, -1]                                    # (B,H,K)
+        k_scaled = kc * jnp.exp(le_c[:, None] - le)
+        s_new = jnp.exp(le_c)[..., None] * s \
+            + jnp.einsum("bihd,bihj->bhdj", k_scaled, vc)
+        return s_new, o
+
+    s, os_ = jax.lax.scan(
+        chunk_step, s,
+        (rf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+         vf.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4)))
+    # (n, b, c, h, k) -> (b, t, h, k)
+    return os_.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dk), s
+
+
+def apply_rwkv_timemix(p: dict, x: jax.Array, *, state: Optional[dict] = None,
+                       decode: bool = False, chunk: int = 32):
+    """x: (B,T,D).  state: {"shift": (B,1,D), "s": (B,H,K,K)}."""
+    b, t, d = x.shape
+    prev = state["shift"] if state is not None else None
+    shifted, new_shift = _token_shift(x, prev)
+    r, k, v, g, log_w = _rwkv_rkvwg(p, x, shifted)
+    u = p["bonus_u"].astype(jnp.float32)
+    s0 = state["s"] if state is not None else None
+    if decode:
+        o, s = rwkv_ref(r, k, v, log_w, u, s0)
+    else:
+        o, s = rwkv_chunked(r, k, v, log_w, u, s0, chunk=chunk)
+    h, dk = o.shape[2], o.shape[3]
+    o = apply_norm(p["ln_x"], o.reshape(b, t, h * dk).astype(COMPUTE_DTYPE),
+                   "layernorm").reshape(b, t, h, dk)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bthk,hkd->btd", o, cast(p["w_o"]))
+    return (shard(out, "batch", "seq", "embed"),
+            {"shift": new_shift, "s": s})
+
+
+def apply_rwkv_channelmix(p: dict, x: jax.Array,
+                          state: Optional[jax.Array] = None):
+    """RWKV channel-mix (squared-relu FFN with receptance gate).
+
+    state: (B,1,D) carried previous token (decode).
+    """
+    shifted, new_shift = _token_shift(x, state)
+    xk = _mix(x, shifted, p["mix_c"])
+    xr = _mix(x, shifted, p["mix_rc"])
+    hidden = jnp.einsum("btd,df->btf", xk, cast(p["w_in"]))
+    hidden = jnp.square(jax.nn.relu(hidden))
+    hidden = shard(hidden, "batch", "seq", "mlp")
+    out = jnp.einsum("btf,fd->btd", hidden, cast(p["w_out"]))
+    recept = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, cast(p["w_r"])))
+    return shard(out * recept, "batch", "seq", "embed"), new_shift
+
+
+def rwkv_init_state(batch: int, d_model: int, n_heads: int, head_dim: int
+                    ) -> dict:
+    return {
+        "shift": jnp.zeros((batch, 1, d_model), COMPUTE_DTYPE),
+        "s": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "cmix_shift": jnp.zeros((batch, 1, d_model), COMPUTE_DTYPE),
+    }

@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (
+    LOGICAL_RULES, logical_to_pspec, shard, param_pspecs, param_shardings,
+    activity, ShardingContext, current_mesh, set_mesh, batch_axes,
+)
+
+__all__ = [
+    "LOGICAL_RULES", "logical_to_pspec", "shard", "param_pspecs",
+    "param_shardings", "activity", "ShardingContext", "current_mesh",
+    "set_mesh", "batch_axes",
+]

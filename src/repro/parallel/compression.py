@@ -1,0 +1,62 @@
+"""Gradient compression for slow cross-pod links.
+
+``compressed_psum`` quantizes a pytree to int8 (per-leaf scale shared
+across the group via pmax) with error feedback, then all-reduces the int8
+payload in int16 accumulation — 2x wire bytes vs fp32 even before EF, and
+the EF buffer makes the quantization error telescoping instead of biased.
+Used by the DiLoCo outer step (diloco.py) for the pod axis, where the
+inter-pod DCI is ~10x slower than in-pod ICI.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ef(x: jax.Array, err: jax.Array, axis_name: str):
+    """Quantize (x + err) to int8 with a group-consistent scale.
+
+    Returns (q int8, scale f32 scalar, new_err)."""
+    xe = x.astype(jnp.float32) + err.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xe))
+    absmax = jax.lax.pmax(absmax, axis_name)      # identical scale group-wide
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
+    new_err = xe - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compressed_psum_leaf(x, err, axis_name: str, mean: bool = True):
+    """int8+EF psum of one leaf inside shard_map/pmap context."""
+    q, scale, new_err = quantize_ef(x, err, axis_name)
+    # int16 accumulation: exact for group sizes <= 256
+    total = jax.lax.psum(q.astype(jnp.int16), axis_name)
+    out = total.astype(jnp.float32) * scale
+    if mean:
+        n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+        out = out / n.astype(jnp.float32)
+    return out.astype(x.dtype), new_err
+
+
+def compressed_psum_tree(tree, err_tree, axis_name: str, mean: bool = True):
+    flat, tdef = jax.tree.flatten(tree)
+    errs = tdef.flatten_up_to(err_tree)
+    outs, new_errs = [], []
+    for x, e in zip(flat, errs):
+        o, ne = compressed_psum_leaf(x, e, axis_name, mean)
+        outs.append(o)
+        new_errs.append(ne)
+    return tdef.unflatten(outs), tdef.unflatten(new_errs)
+
+
+def zero_error_state(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def wire_bytes(tree, mode: str = "int8") -> int:
+    """Bytes on the wire per reduction, for the roofline accounting."""
+    per = {"int8": 1, "bf16": 2, "f32": 4}[mode]
+    return sum(x.size * per for x in jax.tree.leaves(tree))

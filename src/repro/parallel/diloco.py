@@ -1,0 +1,121 @@
+"""DiLoCo-style multi-pod training: each pod takes H independent inner
+AdamW steps on its own data shard, then pods synchronize with an outer
+Nesterov-momentum step over the *delta* — cutting cross-pod traffic by H
+and shrinking it further with int8+EF compression (compression.py).
+
+Representation: the per-pod replicas are a leading ``n_pods`` axis on every
+param/optimizer leaf, sharded over the ``pod`` mesh axis; the inner step is
+vmapped over that axis, so XLA partitions it with ZERO cross-pod
+collectives (verified by tests/test_diloco.py parsing the compiled HLO).
+The outer sync is the only cross-pod communication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.compression import (
+    compressed_psum_tree, zero_error_state,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DilocoConfig:
+    inner_steps: int = 8          # H
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9   # Nesterov
+    compress: bool = True         # int8+EF on the pod axis
+
+
+def replicate_for_pods(tree, n_pods: int):
+    """Stack a per-pod leading axis (all pods start from the anchor)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods, *x.shape)), tree)
+
+
+def init_outer_state(anchor):
+    return {
+        "anchor": anchor,
+        "momentum": jax.tree.map(lambda x: jnp.zeros_like(
+            x, dtype=jnp.float32), anchor),
+        "err": zero_error_state(anchor),
+    }
+
+
+def build_inner_steps(train_step: Callable, h: int) -> Callable:
+    """H sequential inner steps, vmapped over the leading pod axis.
+
+    batch: (n_pods, h, local_batch, ...) — per pod, per inner step.
+    """
+
+    def pod_inner(params, opt_state, batches, step0):
+        def body(carry, i):
+            params, opt_state = carry
+            mb = jax.tree.map(lambda x: x[i], batches)
+            params, opt_state, metrics = train_step(params, opt_state, mb,
+                                                    step0 + i)
+            return (params, opt_state), metrics["loss"]
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), jnp.arange(h))
+        return params, opt_state, losses
+
+    return jax.vmap(pod_inner, in_axes=(0, 0, 0, None))
+
+
+def outer_step(pod_params, outer, dcfg: DilocoConfig, mesh: Mesh):
+    """Average per-pod deltas (compressed over the pod axis), take an outer
+    Nesterov step on the anchor, re-broadcast to all pods."""
+    anchor = outer["anchor"]
+
+    def f(pp, anc, mom, err):
+        delta = jax.tree.map(
+            lambda p, a: (a.astype(jnp.float32)
+                          - p[0].astype(jnp.float32)), pp, anc)
+        # p has a leading local pod axis of size 1 inside shard_map
+        if dcfg.compress:
+            delta, err = compressed_psum_tree(delta, err, "pod", mean=True)
+        else:
+            delta = jax.tree.map(lambda d: jax.lax.pmean(d, "pod"), delta)
+        mom = jax.tree.map(
+            lambda m, d: dcfg.outer_momentum * m + d.astype(jnp.float32),
+            mom, delta)
+        # Nesterov: step along momentum + current delta
+        new_anchor = jax.tree.map(
+            lambda a, m, d: (a.astype(jnp.float32)
+                             - dcfg.outer_lr * (dcfg.outer_momentum * m
+                                                + d.astype(jnp.float32))
+                             ).astype(a.dtype),
+            anc, mom, delta)
+        n_pods_local = pp and 1
+        new_pp = jax.tree.map(
+            lambda a, p: jnp.broadcast_to(a[None], p.shape).astype(p.dtype),
+            new_anchor, pp)
+        return new_pp, new_anchor, mom, err
+
+    if "pod" not in mesh.axis_names:
+        raise ValueError("outer_step needs a 'pod' mesh axis")
+
+    in_specs = (
+        jax.tree.map(lambda _: P("pod"), pod_params),
+        jax.tree.map(lambda _: P(), anchor),
+        jax.tree.map(lambda _: P(), outer["momentum"]),
+        jax.tree.map(lambda _: P(), outer["err"]),
+    )
+    out_specs = (
+        jax.tree.map(lambda _: P("pod"), pod_params),
+        jax.tree.map(lambda _: P(), anchor),
+        jax.tree.map(lambda _: P(), outer["momentum"]),
+        jax.tree.map(lambda _: P(), outer["err"]),
+    )
+    new_pp, new_anchor, mom, err = jax.shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(pod_params, anchor, outer["momentum"], outer["err"])
+    return new_pp, {"anchor": new_anchor, "momentum": mom, "err": err}

@@ -1,0 +1,242 @@
+"""Logical-axis sharding rules (MaxText-style) for the (pod, data, model) mesh.
+
+Models annotate activations with *logical* axis names via ``shard(x, ...)``;
+parameters get PartitionSpecs from path-based rules in ``param_pspecs``.
+When no mesh is active (CPU smoke tests) everything is a no-op, so the same
+model code runs on one device and on the 512-chip production mesh.
+
+Physical axes:
+  pod    — across pods (pure data parallelism; gradient all-reduce crosses DCI)
+  data   — within-pod data parallelism + FSDP (params/optimizer sharded)
+  model  — tensor parallelism (heads / d_ff / vocab / experts / decode-KV-seq)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axes (None = replicate)
+LOGICAL_RULES: dict = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # activations keep d_model replicated under TP
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",      # EP: experts sharded over the TP axis
+    "kv_seq": "model",      # decode KV cache: sequence-parallel
+    "act_seq": None,        # residual-stream seq dim (Megatron-SP variant)
+    "fsdp": "data",         # weight d_model dims sharded for ZeRO-3
+    "conv_k": None,
+    "state": None,
+}
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _state.mesh = mesh
+    _state.rules = dict(LOGICAL_RULES, **(rules or {}))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", LOGICAL_RULES)
+
+
+@contextlib.contextmanager
+def activity(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh for shard() annotations within the block."""
+    prev_mesh = current_mesh()
+    prev_rules = getattr(_state, "rules", None)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        if prev_rules is not None:
+            _state.rules = prev_rules
+
+
+class ShardingContext:
+    """Bound (mesh, rules) pair — handed to launch code."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(LOGICAL_RULES, **(rules or {}))
+
+    def pspec(self, *logical_axes) -> P:
+        return logical_to_pspec(logical_axes, self.rules, self.mesh)
+
+    def sharding(self, *logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*logical_axes))
+
+
+def _filter_axes(axes, mesh: Optional[Mesh]):
+    """Drop physical axes not present in the mesh (e.g. 'pod' on 2D mesh)."""
+    if mesh is None:
+        return axes
+    names = set(mesh.axis_names)
+    if isinstance(axes, tuple):
+        kept = tuple(a for a in axes if a in names)
+        return kept if kept else None
+    return axes if axes in names else None
+
+
+def logical_to_pspec(logical_axes, rules: Optional[dict] = None,
+                     mesh: Optional[Mesh] = None) -> P:
+    rules = rules or current_rules()
+    mesh = mesh or current_mesh()
+    phys = []
+    for ax in logical_axes:
+        if ax is None:
+            phys.append(None)
+        else:
+            phys.append(_filter_axes(rules.get(ax), mesh))
+    return P(*phys)
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    """Physical axes carrying the batch dim (for data sharding / DP size)."""
+    return _filter_axes(current_rules().get("batch"), mesh or current_mesh())
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(logical_axes, current_rules(), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs, by leaf path.  Paths look like
+# "decoder/blocks_0/attn/wq", "decoder/blocks_0/moe/experts/w_up", ...
+# Order matters: first match wins.
+# ---------------------------------------------------------------------------
+_PARAM_RULES: list = [
+    # embeddings
+    (r"tok_emb$",            ("vocab", "fsdp")),
+    (r"out_emb$",            ("fsdp", "vocab")),
+    (r"pos_emb$",            (None, "fsdp")),
+    # attention (kv_heads has its own rule: archs with n_kv < |model| or
+    # n_heads % |model| != 0 replicate that axis — see input_specs)
+    (r"attn/wq$",            ("fsdp", "heads", None)),   # (D, H, dh)
+    (r"attn/w(k|v)$",        ("fsdp", "kv_heads", None)),
+    (r"attn/wo$",            ("heads", None, "fsdp")),   # (H, dh, D)
+    (r"attn/bq$",            ("heads", None)),
+    (r"attn/b(k|v)$",        ("kv_heads", None)),
+    (r"attn/bo$",            (None,)),
+    (r"attn/(q|k)_norm$",    (None,)),
+    # dense mlp
+    (r"mlp/w_(gate|up)$",    ("fsdp", "mlp")),
+    (r"mlp/w_down$",         ("mlp", "fsdp")),
+    (r"mlp/b_(gate|up)$",    ("mlp",)),
+    (r"mlp/b_down$",         (None,)),
+    # MoE
+    (r"moe/router$",         ("fsdp", None)),
+    (r"moe/experts/w_(gate|up)$", ("expert", "fsdp", None)),
+    (r"moe/experts/w_down$", ("expert", None, "fsdp")),
+    (r"moe/shared/w_(gate|up)$",  ("fsdp", "mlp")),
+    (r"moe/shared/w_down$",  ("mlp", "fsdp")),
+    # RG-LRU (griffin recurrent block)
+    (r"rglru/w_(x|gate)$",   ("fsdp", "mlp")),           # in-projections
+    (r"rglru/w_out$",        ("mlp", "fsdp")),
+    (r"rglru/conv_w$",       ("conv_k", "mlp")),
+    (r"rglru/conv_b$",       ("mlp",)),
+    (r"rglru/(a_param|in_gate_w|rec_gate_w)$", ("mlp", None, None)),
+    (r"rglru/(in_gate_b|rec_gate_b)$",         ("mlp", None)),
+    # RWKV6
+    (r"rwkv/w_(r|k|v|g)$",   ("fsdp", "heads", None)),
+    (r"rwkv/w_o$",           ("heads", None, "fsdp")),
+    (r"rwkv/(decay_w|bonus_u)$", ("heads", None)),
+    (r"rwkv/mix_.*$",        (None,)),
+    (r"rwkv/decay_lora_(a)$", ("fsdp", None)),
+    (r"rwkv/decay_lora_(b)$", (None, "heads", None)),
+    (r"rwkv/ln_x/.*$",       (None,)),
+    (r"cmix/w_in$",          ("fsdp", "mlp")),
+    (r"cmix/w_out$",         ("mlp", "fsdp")),
+    # norms & scalars
+    (r"(norm|norm1|norm2|norm3|final_norm|ln)/(scale|bias)$", (None,)),
+    (r".*(scale|bias)$",     (None,)),
+]
+
+
+def _spec_for_path(path: str, ndim: int, rules: dict,
+                   mesh: Optional[Mesh]) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            axes = logical[:ndim]
+            # pad to ndim
+            axes = tuple(axes) + (None,) * (ndim - len(axes))
+            return logical_to_pspec(axes, rules, mesh)
+    return P()   # replicate unknowns
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspecs(params, rules: Optional[dict] = None,
+                 mesh: Optional[Mesh] = None):
+    """Tree of PartitionSpecs congruent with ``params``.
+
+    Stacked-layer leaves (under a 'blocks'/'units' scan stack) have a
+    leading layer dim — detected by path and given a leading None.
+    """
+    rules = dict(current_rules(), **(rules or {}))
+
+    def _axis_size(axes) -> int:
+        if axes is None or mesh is None:
+            return 1
+        n = 1
+        for a in ((axes,) if isinstance(axes, str) else axes):
+            n *= mesh.shape[a]
+        return n
+
+    def _guard(p: P, shape) -> P:
+        """Replicate any dim a mesh axis does not evenly divide (e.g.
+        vocab=49155 on TP=16) — the honest 'ragged shard' fallback; the
+        perf pass shows the paper's pad-to-quantum fix instead."""
+        out = []
+        for i, axes in enumerate(p):
+            n = _axis_size(axes)
+            out.append(axes if (n <= 1 or shape[i] % n == 0) else None)
+        return P(*out)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        ndim = leaf.ndim
+        stacked = "/stack/" in f"/{ps}/"
+        if stacked:
+            inner = _spec_for_path(ps, ndim - 1, rules, mesh)
+            return _guard(P(None, *inner), leaf.shape)
+        return _guard(_spec_for_path(ps, ndim, rules, mesh), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
+    specs = param_pspecs(params, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, Result, ServeEngine
+
+__all__ = ["Request", "Result", "ServeEngine"]

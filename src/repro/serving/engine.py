@@ -1,0 +1,128 @@
+"""Batched serving engine: prefill + decode with greedy/temperature
+sampling, continuous slot management and per-request stop handling.
+
+The decode step is the exact function the dry-run lowers for the
+``decode_32k`` / ``long_500k`` cells; on the production mesh the KV cache is
+sequence-sharded over the model axis (flash-decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1: never stop early
+    temperature: float = 0.0    # 0 = greedy
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    steps: int
+
+
+class ServeEngine:
+    """Static-batch engine: pads requests to a slot batch, prefills, then
+    decodes all slots in lockstep, releasing finished ones."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512,
+                 batch_slots: int = 4, rng_seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.rng = jax.random.PRNGKey(rng_seed)
+
+        self._decode = jax.jit(
+            lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
+        self._prefill = jax.jit(
+            lambda p, toks: tfm.forward(p, cfg, tokens=toks,
+                                        mode="prefill"))
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        out: List[Result] = []
+        for i in range(0, len(requests), self.slots):
+            out.extend(self._generate_batch(requests[i:i + self.slots]))
+        return out
+
+    def _generate_batch(self, reqs: List[Request]) -> List[Result]:
+        cfg = self.cfg
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        toks_j = jnp.asarray(toks)
+
+        logits, states, _ = self._prefill(self.params, toks_j)
+        states = self._ensure_states(states, b, plen)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        last = logits[:, -1, :cfg.vocab_size]
+        cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        generated = [cur]
+        done = np.zeros(b, bool)
+        steps = 0
+        for t in range(max_new - 1):
+            pos = jnp.asarray(plen + t, jnp.int32)
+            logits, states = self._decode(self.params, cur, pos, states)
+            logits = logits[:, :cfg.vocab_size]
+            if any(r.temperature > 0 for r in reqs):
+                self.rng, sub = jax.random.split(self.rng)
+                temp = jnp.asarray([max(r.temperature, 1e-6)
+                                    for r in reqs])[:, None]
+                nxt = jax.random.categorical(sub, logits / temp, axis=-1)
+                greedy = jnp.argmax(logits, axis=-1)
+                use_t = jnp.asarray([r.temperature > 0 for r in reqs])
+                cur = jnp.where(use_t, nxt, greedy).astype(jnp.int32)
+            else:
+                cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            generated.append(cur)
+            steps += 1
+            host = np.asarray(cur)
+            for i, r in enumerate(reqs):
+                if r.eos_id >= 0 and host[i] == r.eos_id:
+                    done[i] = True
+            if done.all():
+                break
+
+        gen = np.stack([np.asarray(g) for g in generated], axis=1)
+        results = []
+        for i, r in enumerate(reqs):
+            row = gen[i][: r.max_new_tokens]
+            if r.eos_id >= 0 and (row == r.eos_id).any():
+                row = row[: int(np.argmax(row == r.eos_id)) + 1]
+            results.append(Result(tokens=row, steps=steps + 1))
+        return results
+
+    def _ensure_states(self, states, b: int, plen: int):
+        """Grow prefill caches to max_len decode capacity."""
+        cfg = self.cfg
+
+        def pad_cache(x):
+            # attention caches: (B, S, KV, dh) or stacked (L, B, S, KV, dh);
+            # pad the sequence dim to max_len decode capacity.
+            if x.ndim == 4 and x.shape[0] == b and x.shape[1] == plen:
+                pad = self.max_len - plen
+                if pad > 0:
+                    return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if x.ndim == 5 and x.shape[1] == b and x.shape[2] == plen:
+                pad = self.max_len - plen
+                if pad > 0:
+                    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                       (0, 0)))
+            return x
+
+        return jax.tree.map(pad_cache, states)

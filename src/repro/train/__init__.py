@@ -1,0 +1,15 @@
+from repro.train.optim import (
+    AdamState, AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+    clip_by_global_norm, global_norm,
+)
+from repro.train.step import TrainConfig, build_train_step, build_eval_step
+from repro.train.data import DataConfig, SyntheticLM, MemmapLM, make_source, \
+    augment_for_arch
+from repro.train import checkpoint
+
+__all__ = [
+    "AdamState", "AdamWConfig", "adamw_init", "adamw_update",
+    "cosine_schedule", "clip_by_global_norm", "global_norm", "TrainConfig",
+    "build_train_step", "build_eval_step", "DataConfig", "SyntheticLM",
+    "MemmapLM", "make_source", "augment_for_arch", "checkpoint",
+]

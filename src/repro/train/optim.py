@@ -1,0 +1,170 @@
+"""AdamW, gradient clipping and LR schedules (no external deps).
+
+Optimizer state mirrors the parameter tree, so it inherits the params'
+PartitionSpecs (ZeRO: moments are sharded exactly like the weights).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    """int8 tensor + per-row fp32 scale (8-bit Adam moments).
+
+    398B-param MoE optimizer state at fp32 moments is 2x8 bytes/param —
+    19 GB/chip on a 256-chip pod even fully sharded.  int8 moments cut that
+    to ~2 bytes/param and fit.
+    """
+    q: jax.Array       # int8, same shape as the param
+    scale: jax.Array   # f32, shape[:-1] + (1,)
+
+
+def quantize_q8(x: jax.Array) -> Quantized:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize_q8(z: Quantized) -> jax.Array:
+    return z.q.astype(jnp.float32) * z.scale
+
+
+def quantize_q8_sqrt(x: jax.Array) -> Quantized:
+    """sqrt-domain int8 for the (non-negative) second moment: a linear grid
+    on v zeroes small entries and 1/sqrt(v~0) explodes the step; the sqrt
+    domain halves the dynamic range (8-bit-Adam-style dynamic quant)."""
+    return quantize_q8(jnp.sqrt(jnp.maximum(x, 0.0)))
+
+
+def dequantize_q8_sqrt(z: Quantized) -> jax.Array:
+    r = dequantize_q8(z)
+    return jnp.square(r)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: dict
+    nu: dict
+    comp: object = None    # bf16 Kahan compensation (bf16_kahan master)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantize_moments: bool = False   # 8-bit Adam (int8 mu/nu + row scales)
+    # 'f32' keeps fp32 master weights; 'bf16_kahan' stores bf16 master +
+    # bf16 Kahan compensation (DeepSpeed BF16Optimizer-style) — needed when
+    # params/chip exceed what fp32 master + fp32 grads can fit (llama4
+    # maverick: 1.55B params/chip on a 256-chip pod).
+    master_dtype: str = "f32"
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamState:
+    if cfg.quantize_moments:
+        zeros = lambda t: jax.tree.map(
+            lambda p: quantize_q8(jnp.zeros(p.shape, jnp.float32)), t)
+    else:
+        zeros = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    comp = None
+    if cfg.master_dtype == "bf16_kahan":
+        comp = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                            params)
+    return AdamState(count=jnp.zeros((), jnp.int32), mu=zeros(params),
+                     nu=zeros(params), comp=comp)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+_CHUNK_BYTES = 512 * 1024 * 1024
+
+
+def adamw_update(grads, state: AdamState, params, lr: jax.Array,
+                 cfg: AdamWConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** cf
+    bc2 = 1.0 - cfg.b2 ** cf
+    kahan = cfg.master_dtype == "bf16_kahan"
+
+    def upd(g, m, v, p, c):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        delta = -lr * step
+        pf = p.astype(jnp.float32)
+        if c is not None:
+            # Kahan-compensated bf16 master update: the compensation buffer
+            # carries the bits lost by the bf16 store.
+            y = delta - c.astype(jnp.float32)
+            p_new = (pf + y).astype(p.dtype)
+            c_new = ((p_new.astype(jnp.float32) - pf) - y
+                     ).astype(jnp.bfloat16)
+            return p_new, m_new, v_new, c_new
+        return (pf + delta).astype(p.dtype), m_new, v_new, None
+
+    is_q = lambda x: isinstance(x, Quantized)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state.mu, is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(state.nu, is_leaf=is_q)[0]
+    flat_c = (tdef.flatten_up_to(state.comp) if kahan
+              else [None] * len(flat_p))
+
+    def one_leaf(g, m, v, p, c):
+        quantized = is_q(m)
+        if quantized:
+            m, v = dequantize_q8(m), dequantize_q8_sqrt(v)
+        pn, mn, vn, cn = upd(g, m, v, p, c)
+        if quantized:
+            mn, vn = quantize_q8(mn), quantize_q8_sqrt(vn)
+        return pn, mn, vn, cn
+
+    new_p, new_m, new_v, new_c = [], [], [], []
+    for g, m, v, p, c in zip(flat_g, flat_m, flat_v, flat_p, flat_c):
+        pn, mn, vn, cn = one_leaf(g, m, v, p, c)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+        new_c.append(cn)
+    mdef = jax.tree.structure(state.mu, is_leaf=is_q)
+    comp_new = tdef.unflatten(new_c) if kahan else None
+    return (tdef.unflatten(new_p),
+            AdamState(count=count, mu=mdef.unflatten(new_m),
+                      nu=mdef.unflatten(new_v), comp=comp_new),
+            {"grad_norm": gnorm})
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,95 @@
+"""Train-step builder: loss + grad + AdamW, with microbatched gradient
+accumulation (lax.scan) so arbitrarily large global batches fit HBM."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.train.optim import AdamState, AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    remat: str = "full"       # none | full | dots | sqrt
+    moe_strategy: str = "auto"
+    aux_weight: float = 0.01
+    z_weight: float = 1e-3
+    accum_dtype: str = "f32"  # grad-accumulation dtype (bf16 with kahan)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    from repro.parallel.sharding import shard
+
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        y = x.reshape(n, b // n, *x.shape[1:])
+        # Re-anchor the batch sharding after the reshape: without this the
+        # SPMD partitioner falls back to "involuntary full rematerialization"
+        # (replicate-then-reshard) when slicing microbatches.
+        return shard(y, None, "batch", *([None] * (x.ndim - 1)))
+    return jax.tree.map(sp, batch)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tc: TrainConfig):
+    return tfm.train_loss(params, batch, cfg,
+                          moe_strategy=tc.moe_strategy, remat=tc.remat,
+                          aux_weight=tc.aux_weight, z_weight=tc.z_weight)
+
+
+def grads_fn(params, batch, cfg: ModelConfig, tc: TrainConfig):
+    """Value-and-grad with microbatch accumulation."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    if tc.microbatches <= 1:
+        (loss, metrics), grads = vg(params, batch, cfg, tc)
+        return loss, metrics, grads
+
+    micro = _split_micro(batch, tc.microbatches)
+
+    acc_dt = jnp.bfloat16 if tc.accum_dtype == "bf16" else jnp.float32
+
+    def body(carry, mb):
+        g_acc, l_acc = carry
+        (loss, metrics), g = vg(params, mb, cfg, tc)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g_acc, g)
+        return (g_acc, l_acc + loss), metrics
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    (g_sum, l_sum), ms = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
+    inv = 1.0 / tc.microbatches
+    grads = jax.tree.map(lambda g: g * inv, g_sum)
+    metrics = jax.tree.map(lambda m: jnp.mean(m), ms)
+    return l_sum * inv, metrics, grads
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig,
+                     lr_schedule: Callable) -> Callable:
+    """Returns step(params, opt_state, batch, step_idx) ->
+    (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamState, batch: dict,
+                   step_idx: jax.Array):
+        loss, metrics, grads = grads_fn(params, batch, cfg, tc)
+        lr = lr_schedule(step_idx)
+        params, opt_state, om = adamw_update(grads, opt_state, params, lr,
+                                             tc.adamw)
+        metrics = dict(metrics, **om, lr=lr, total_loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg, tc)
+        return dict(metrics, total_loss=loss)
+    return eval_step

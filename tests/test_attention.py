@@ -1,0 +1,81 @@
+"""Model-level attention: chunked-flash vs exact, decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.attention import (
+    chunked_attention, decode_attention, local_attention_prefill,
+)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestChunked:
+    @pytest.mark.parametrize("mask,window", [("causal", 0), ("none", 0),
+                                             ("local", 48)])
+    def test_vs_exact(self, mask, window):
+        b, s, h, kv, dh = 2, 256, 8, 2, 32
+        q, k, v = rand(1, (b, s, h, dh)), rand(2, (b, s, kv, dh)), \
+            rand(3, (b, s, kv, dh))
+        out = chunked_attention(q, k, v, mask_kind=mask, window=window,
+                                q_chunk=64, kv_chunk=64)
+        expect = ref.attention_ref(q, k, v, mask_kind=mask, window=window)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   expect.astype(jnp.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    @given(qc=st.sampled_from([32, 64, 128, 256]),
+           kc=st.sampled_from([32, 64, 128, 256]))
+    @settings(max_examples=8, deadline=None)
+    def test_chunk_size_invariance(self, qc, kc):
+        """Output must not depend on the chunking (pure perf knob)."""
+        b, s, h, kv, dh = 1, 256, 4, 4, 32
+        q, k, v = rand(1, (b, s, h, dh)), rand(2, (b, s, kv, dh)), \
+            rand(3, (b, s, kv, dh))
+        base = chunked_attention(q, k, v, q_chunk=256, kv_chunk=256)
+        out = chunked_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   base.astype(jnp.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+    def test_local_strip_equals_masked(self):
+        b, s, h, kv, dh = 2, 512, 4, 1, 32
+        q, k, v = rand(1, (b, s, h, dh)), rand(2, (b, s, kv, dh)), \
+            rand(3, (b, s, kv, dh))
+        full = chunked_attention(q, k, v, mask_kind="local", window=64,
+                                 q_chunk=128, kv_chunk=128)
+        strip = local_attention_prefill(q, k, v, window=64, q_chunk=128)
+        np.testing.assert_allclose(strip.astype(jnp.float32),
+                                   full.astype(jnp.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestDecode:
+    def test_decode_equals_row_of_full(self):
+        """decode at position p == row p of full causal attention."""
+        b, s, h, kv, dh = 2, 64, 4, 2, 16
+        q, k, v = rand(1, (b, s, h, dh)), rand(2, (b, s, kv, dh)), \
+            rand(3, (b, s, kv, dh))
+        full = ref.attention_ref(q, k, v, mask_kind="causal")
+        for p in (0, 13, 63):
+            dec = decode_attention(q[:, p], k, v, jnp.asarray(p + 1))
+            np.testing.assert_allclose(
+                dec.astype(jnp.float32), full[:, p].astype(jnp.float32),
+                rtol=2e-2, atol=2e-2)
+
+    def test_cache_len_masks_garbage(self):
+        """Positions >= cache_len must not affect the result."""
+        b, s, h, kv, dh = 1, 32, 2, 2, 16
+        q = rand(1, (b, h, dh))
+        k, v = rand(2, (b, s, kv, dh)), rand(3, (b, s, kv, dh))
+        k2 = k.at[:, 20:].set(1e4)   # garbage beyond cache_len
+        v2 = v.at[:, 20:].set(-1e4)
+        a = decode_attention(q, k, v, jnp.asarray(20))
+        b_ = decode_attention(q, k2, v2, jnp.asarray(20))
+        np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,85 @@
+"""Collective parsing + roofline arithmetic (the §Roofline machinery)."""
+
+import numpy as np
+import pytest
+
+from repro.core import TPU_V5E, build_report, parse_collectives
+from repro.core.hlo_analysis import CollectiveSummary, count_ops
+
+SAMPLE = """
+  %ag = f32[1024,64]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[256,4096]{1,0} all-reduce(%b), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%c), replica_groups=[2,8]<=[16], dimensions={0}
+  %a2a = bf16[128,64]{1,0} all-to-all(%d), replica_groups=[32,16]<=[512]
+  %cps = bf16[4,4]{1,0} collective-permute-start(%e), channel_id=9
+  %cpd = bf16[4,4]{1,0} collective-permute-done(%cps)
+  %dot = f32[8,8]{1,0} dot(%x, %y)
+"""
+
+
+class TestParser:
+    def test_kinds_and_counts(self):
+        s = parse_collectives(SAMPLE)
+        kinds = sorted(o.kind for o in s.ops)
+        assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                         "collective-permute", "reduce-scatter"]
+
+    def test_group_sizes(self):
+        s = parse_collectives(SAMPLE)
+        by = {o.kind: o for o in s.ops}
+        assert by["all-gather"].group_size == 16
+        assert by["all-reduce"].group_size == 4
+        assert by["reduce-scatter"].group_size == 8
+        assert by["all-to-all"].group_size == 16
+
+    def test_operand_derivation(self):
+        s = parse_collectives(SAMPLE)
+        by = {o.kind: o for o in s.ops}
+        # all-gather result 1024*64*4 bytes over 16 shards
+        assert by["all-gather"].operand_bytes == 1024 * 64 * 4 // 16
+        assert by["all-reduce"].operand_bytes == 256 * 4096 * 2
+        assert by["reduce-scatter"].operand_bytes == 64 * 32 * 4 * 8
+
+    def test_ring_traffic(self):
+        s = parse_collectives(SAMPLE)
+        by = {o.kind: o for o in s.ops}
+        r = 1024 * 64 * 4
+        assert by["all-gather"].ring_traffic_bytes == pytest.approx(
+            r * 15 / 16)
+        ar = 256 * 4096 * 2
+        assert by["all-reduce"].ring_traffic_bytes == pytest.approx(
+            2 * ar * 3 / 4)
+        assert by["collective-permute"].ring_traffic_bytes == 4 * 4 * 2
+
+    def test_done_not_double_counted(self):
+        s = parse_collectives(SAMPLE)
+        assert sum(o.kind == "collective-permute" for o in s.ops) == 1
+
+    def test_count_ops(self):
+        c = count_ops(SAMPLE, ["dot", "all-gather"])
+        assert c["dot"] == 1
+
+
+class TestRoofline:
+    def test_terms(self):
+        s = parse_collectives(SAMPLE)
+        rep = build_report(
+            arch="x", shape="train_4k", mesh="single", chips=256,
+            cost={"flops": 1.97e14, "bytes_accessed": 8.19e11},
+            collectives=s, model_flops_total=1.97e14 * 256 * 0.5,
+            hw=TPU_V5E)
+        assert rep.compute_s == pytest.approx(1.0)
+        assert rep.memory_s == pytest.approx(1.0)
+        assert rep.dominant in ("compute", "memory")
+        assert rep.useful_flops_fraction == pytest.approx(0.5)
+        # roofline fraction: useful flops at the bound vs peak
+        assert 0 < rep.roofline_fraction <= 1.0
+
+    def test_dominant_collective(self):
+        s = CollectiveSummary(ops=[])
+        rep = build_report(
+            arch="x", shape="s", mesh="single", chips=2,
+            cost={"flops": 1.0, "bytes_accessed": 1.0},
+            collectives=s, model_flops_total=1.0, hw=TPU_V5E)
+        assert rep.collective_s == 0.0
+        assert rep.dominant in ("compute", "memory")

@@ -1,0 +1,112 @@
+"""Pallas kernels vs. pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) \
+        .astype(dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 4e-2}
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 384, 512),
+                                       (100, 130, 70), (64, 257, 129)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, m, n, k, dtype):
+        x, w = rand(1, (m, k), dtype), rand(2, (k, n), dtype)
+        out = ops.matmul(x, w, block_m=64, block_n=64, block_k=64,
+                         force="pallas_interpret")
+        expect = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), expect.astype(jnp.float32),
+            rtol=TOL[dtype], atol=TOL[dtype] * 8)
+
+    def test_grid_blocks_matches_ceil(self):
+        from repro.kernels.matmul_tiled import grid_blocks
+        assert grid_blocks(100, 130, 70, 64, 64, 64) == 2 * 3 * 2
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("mask,window", [("causal", 0), ("none", 0),
+                                             ("local", 96)])
+    @pytest.mark.parametrize("b,s,h,kv,dh", [(2, 256, 8, 2, 64),
+                                             (1, 128, 4, 4, 32),
+                                             (2, 128, 4, 1, 64)])
+    def test_vs_ref(self, mask, window, b, s, h, kv, dh):
+        q = rand(1, (b, s, h, dh), jnp.float32)
+        k = rand(2, (b, s, kv, dh), jnp.float32)
+        v = rand(3, (b, s, kv, dh), jnp.float32)
+        out = ops.flash_attention(q, k, v, mask_kind=mask, window=window,
+                                  block_q=64, block_kv=64,
+                                  force="pallas_interpret")
+        expect = ref.attention_ref(q, k, v, mask_kind=mask, window=window)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        q = rand(1, (1, 128, 4, 32), jnp.bfloat16)
+        k = rand(2, (1, 128, 2, 32), jnp.bfloat16)
+        v = rand(3, (1, 128, 2, 32), jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, block_q=64, block_kv=64,
+                                  force="pallas_interpret")
+        expect = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   expect.astype(jnp.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("b,t,w,ct,bw", [(2, 64, 128, 8, 128),
+                                             (1, 32, 256, 4, 128),
+                                             (3, 16, 128, 16, 64)])
+    def test_vs_ref(self, b, t, w, ct, bw):
+        a = jax.random.uniform(jax.random.PRNGKey(1), (b, t, w),
+                               jnp.float32, 0.3, 0.999)
+        x = rand(2, (b, t, w), jnp.float32)
+        h0 = rand(3, (b, w), jnp.float32)
+        from repro.kernels.rglru import rglru_pallas
+        y, h = rglru_pallas(a, x, h0, chunk_t=ct, block_w=bw,
+                            interpret=True)
+        yr, hr = ref.rglru_ref(a, x, h0)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(h, hr, rtol=1e-5, atol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("b,t,h,dh,chunk", [(2, 64, 2, 64, 16),
+                                                (1, 32, 4, 32, 32),
+                                                (2, 128, 1, 64, 32)])
+    def test_vs_ref(self, b, t, h, dh, chunk):
+        r = rand(1, (b, t, h, dh), jnp.float32)
+        k = rand(2, (b, t, h, dh), jnp.float32)
+        v = rand(3, (b, t, h, dh), jnp.float32)
+        lw = -jnp.exp(jnp.clip(rand(4, (b, t, h, dh), jnp.float32), -8, 1))
+        u = rand(5, (h, dh), jnp.float32) * 0.1
+        out = ops.rwkv6(r, k, v, lw, u, chunk=chunk,
+                        force="pallas_interpret")
+        expect = ref.rwkv6_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+class TestMoeGMM:
+    @pytest.mark.parametrize("e,c,d,f", [(4, 128, 256, 128),
+                                         (2, 256, 128, 256),
+                                         (8, 128, 128, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, e, c, d, f, dtype):
+        x = rand(1, (e, c, d), dtype)
+        w = rand(2, (e, d, f), dtype)
+        out = ops.moe_gmm(x, w, force="pallas_interpret")
+        expect = ref.moe_gmm_ref(x, w)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), expect.astype(jnp.float32),
+            rtol=TOL[dtype], atol=TOL[dtype] * 8)

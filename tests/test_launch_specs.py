@@ -1,0 +1,110 @@
+"""Launch-layer logic: cell rules, variants, microbatch sizing — these run
+without building a mesh of 512 devices (pure functions of config)."""
+
+import dataclasses
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models.transformer import VOCAB_QUANTUM, padded_vocab
+
+
+class FakeMesh:
+    """Duck-typed stand-in: cell_rules/apply_variant only read shape/names."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestCellRules:
+    def test_ragged_heads_replicate(self):
+        from repro.launch.specs import cell_rules
+        cfg = get_config("yi-34b")           # 56 heads, kv 8
+        rules = cell_rules(MESH, cfg, 256)
+        assert rules["heads"] is None
+        assert rules["kv_heads"] is None
+
+    def test_aligned_heads_shard(self):
+        from repro.launch.specs import cell_rules
+        cfg = get_config("deepseek-7b")      # 32 heads, kv 32
+        rules = cell_rules(MESH, cfg, 256)
+        assert "heads" not in rules and "kv_heads" not in rules
+
+    def test_batch_one_replicates(self):
+        from repro.launch.specs import cell_rules
+        cfg = get_config("rwkv6-1.6b")
+        rules = cell_rules(MESH, cfg, 1)
+        assert rules["batch"] is None
+
+    def test_big_model_fsdp_over_pods(self):
+        from repro.launch.specs import cell_rules
+        cfg = get_config("llama4-maverick-400b-a17b")
+        rules = cell_rules(MESH_POD, cfg, 256)
+        assert rules["fsdp"] == ("data", "pod")
+        small = cell_rules(MESH_POD, get_config("qwen1.5-0.5b"), 256)
+        assert "fsdp" not in small
+
+
+class TestVariants:
+    def test_padded_heads(self):
+        from repro.launch.specs import apply_variant
+        cfg = apply_variant(get_config("yi-34b"), "padded_heads", MESH)
+        assert cfg.n_heads == 64 and cfg.n_kv_heads == 16
+        assert cfg.head_dim == 128          # unchanged
+        assert cfg.name.endswith("+padheads")
+        # now shardable
+        from repro.launch.specs import cell_rules
+        rules = cell_rules(MESH, cfg, 256)
+        assert "heads" not in rules
+
+    def test_padded_heads_noop_when_aligned(self):
+        from repro.launch.specs import apply_variant
+        cfg = apply_variant(get_config("deepseek-7b"), "padded_heads", MESH)
+        assert cfg.n_heads == 32 and cfg.n_kv_heads == 32
+
+    def test_seq_parallel(self):
+        from repro.launch.specs import apply_variant, cell_rules
+        cfg = apply_variant(get_config("command-r-plus-104b"),
+                            "seq_parallel", MESH)
+        assert cfg.seq_parallel_acts
+        rules = cell_rules(MESH, cfg, 256)
+        assert rules["act_seq"] == "model"
+
+    def test_none_identity(self):
+        from repro.launch.specs import apply_variant
+        cfg = get_config("yi-34b")
+        assert apply_variant(cfg, "none", MESH) is cfg
+
+
+class TestSizing:
+    @given(arch=st.sampled_from(list_archs()))
+    @settings(max_examples=10, deadline=None)
+    def test_padded_vocab_quantum(self, arch):
+        cfg = get_config(arch)
+        vp = padded_vocab(cfg)
+        assert vp % VOCAB_QUANTUM == 0
+        assert 0 <= vp - cfg.vocab_size < VOCAB_QUANTUM
+        assert vp % 16 == 0                 # always TP-shardable
+
+    def test_microbatches_monotone_in_model_size(self):
+        from repro.launch.specs import microbatches_for
+        big = get_config("command-r-plus-104b")
+        small = get_config("qwen1.5-0.5b")
+        shape = SHAPES["train_4k"]
+        assert microbatches_for(big, MESH, shape) >= \
+            microbatches_for(small, MESH, shape)
+
+    def test_microbatches_divide_batch(self):
+        from repro.launch.specs import microbatches_for
+        shape = SHAPES["train_4k"]
+        for arch in list_archs():
+            mb = microbatches_for(get_config(arch), MESH, shape)
+            seqs_per_dev = shape.global_batch // 16
+            assert seqs_per_dev % mb == 0, (arch, mb)

@@ -1,0 +1,82 @@
+"""Loop-aware HLO cost analysis vs unrolled ground truth."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_loop_analysis import analyze, computation_multipliers
+
+
+def compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+M = 128
+FLOPS_ONE = 2.0 * M * M * M
+
+
+class TestTripCounts:
+    def test_scan_matmul(self):
+        def f(x, ws):
+            return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+        x = jax.ShapeDtypeStruct((M, M), jnp.float32)
+        ws = jax.ShapeDtypeStruct((8, M, M), jnp.float32)
+        txt = compile_text(f, x, ws)
+        cost = analyze(txt)
+        assert cost.flops == pytest.approx(8 * FLOPS_ONE, rel=0.01)
+        assert cost.flops_uncorrected == pytest.approx(FLOPS_ONE, rel=0.01)
+
+    def test_nested_scan(self):
+        def inner(c, w):
+            return c @ w, None
+
+        def outer(c, ws):
+            c2, _ = jax.lax.scan(inner, c, ws)
+            return c2, None
+
+        def f(x, ws):
+            # 3 outer x 4 inner = 12 matmuls
+            return jax.lax.scan(outer, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((M, M), jnp.float32)
+        ws = jax.ShapeDtypeStruct((3, 4, M, M), jnp.float32)
+        txt = compile_text(f, x, ws)
+        cost = analyze(txt)
+        assert cost.flops == pytest.approx(12 * FLOPS_ONE, rel=0.01)
+
+    def test_unrolled_matches(self):
+        def f(x, ws):
+            for i in range(5):
+                x = x @ ws[i]
+            return x
+        x = jax.ShapeDtypeStruct((M, M), jnp.float32)
+        ws = jax.ShapeDtypeStruct((5, M, M), jnp.float32)
+        txt = compile_text(f, x, ws)
+        cost = analyze(txt)
+        assert cost.flops == pytest.approx(5 * FLOPS_ONE, rel=0.01)
+        assert cost.flops == pytest.approx(cost.flops_uncorrected, rel=0.01)
+
+    def test_multipliers_fixpoint(self):
+        def f(x, ws):
+            return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+        x = jax.ShapeDtypeStruct((M, M), jnp.float32)
+        ws = jax.ShapeDtypeStruct((8, M, M), jnp.float32)
+        txt = compile_text(f, x, ws)
+        mult, comps = computation_multipliers(txt)
+        assert max(mult.values()) >= 8
+
+
+class TestAgainstCostAnalysis:
+    def test_uncorrected_matches_xla(self):
+        """Our once-counted FLOPs should track XLA's cost_analysis."""
+        def f(x, ws):
+            return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+        x = jax.ShapeDtypeStruct((M, M), jnp.float32)
+        ws = jax.ShapeDtypeStruct((8, M, M), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = analyze(compiled.as_text())
+        assert cost.flops_uncorrected == pytest.approx(
+            float(ca["flops"]), rel=0.05)

@@ -1,0 +1,53 @@
+"""Pruning baselines (HRank / SOFT criteria) + tail-aware discretization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+
+
+class TestCriteria:
+    def test_rank_scores_detect_informative_channels(self):
+        """Channels with full-rank maps must outrank constant channels."""
+        b, h, w, c = 4, 16, 16, 8
+        rng = jax.random.PRNGKey(0)
+        acts = jax.random.normal(rng, (b, h, w, c))
+        acts = acts.at[..., :3].set(1.0)    # rank-1 (constant) channels
+        scores = pruning.feature_map_rank_scores(acts)
+        assert scores[:3].max() < scores[3:].min()
+
+    def test_l2_scores(self):
+        k = jnp.zeros((3, 3, 4, 6)).at[..., 0].set(10.0)
+        s = pruning.l2_filter_scores(k)
+        assert s[0] > s[1:].max()
+
+    @given(keep=st.integers(1, 16))
+    @settings(max_examples=10, deadline=None)
+    def test_keep_indices(self, keep):
+        scores = np.random.default_rng(0).standard_normal(16)
+        idx = pruning.keep_indices(scores, keep)
+        assert len(idx) == keep
+        assert (np.diff(idx) > 0).all()
+        dropped = np.setdiff1d(np.arange(16), idx)
+        if len(dropped):
+            assert scores[idx].min() >= scores[dropped].max()
+
+    def test_soft_mask(self):
+        scores = np.arange(8.0)
+        m = pruning.soft_prune_mask(scores, 3)
+        assert m.sum() == 3
+        assert (m[-3:] == 1).all()
+
+
+class TestPlans:
+    def test_uniform_plan(self):
+        plan = pruning.uniform_flops_plan({"a": 512, "b": 256}, 0.5)
+        assert plan == {"a": 256, "b": 128}
+
+    def test_build_plan(self):
+        scores = {"a": np.arange(8.0), "b": np.arange(4.0)}
+        plan = pruning.build_plan(lambda n: scores[n], {"a": 3, "b": 2})
+        assert plan.widths == {"a": 3, "b": 2}
+        np.testing.assert_array_equal(plan.indices["a"], [5, 6, 7])

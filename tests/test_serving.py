@@ -1,0 +1,66 @@
+"""Serving engine behaviour."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_params
+from repro.serving import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(params, cfg, max_len=48, batch_slots=4), cfg
+
+
+def test_greedy_deterministic(engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    r1 = eng.generate([Request(prompt=prompt, max_new_tokens=8)])
+    r2 = eng.generate([Request(prompt=prompt, max_new_tokens=8)])
+    np.testing.assert_array_equal(r1[0].tokens, r2[0].tokens)
+    assert len(r1[0].tokens) == 8
+    assert (r1[0].tokens < cfg.vocab_size).all()
+
+
+def test_batched_equals_single(engine):
+    """Slot batching must not change a request's output (same-length
+    prompts; left-padding is only exercised with mixed lengths)."""
+    eng, cfg = engine
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+               for _ in range(3)]
+    batch = eng.generate([Request(prompt=p, max_new_tokens=6)
+                          for p in prompts])
+    singles = [eng.generate([Request(prompt=p, max_new_tokens=6)])[0]
+               for p in prompts]
+    for b, s in zip(batch, singles):
+        np.testing.assert_array_equal(b.tokens, s.tokens)
+
+
+def test_eos_stops_early(engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    base = eng.generate([Request(prompt=prompt, max_new_tokens=8)])[0]
+    eos = int(base.tokens[2])
+    res = eng.generate([Request(prompt=prompt, max_new_tokens=8,
+                                eos_id=eos)])[0]
+    assert len(res.tokens) <= 8
+    assert res.tokens[-1] == eos
+
+
+def test_overflowing_slots(engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,))
+                    .astype(np.int32), max_new_tokens=4)
+            for _ in range(6)]   # > batch_slots=4
+    out = eng.generate(reqs)
+    assert len(out) == 6
+    for r in out:
+        assert len(r.tokens) == 4

@@ -1,0 +1,118 @@
+"""Algorithm 2 behaviour — paper §4.3."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LayerShape, TPU_V5E, TailEffectOptimizer, TunableLayer,
+    WaveQuantizationModel, analytic_candidates, discretize_pruning_space,
+    snap_down, snap_nearest, snap_up,
+)
+
+HW = TPU_V5E
+MODEL = WaveQuantizationModel(HW)
+OPT = TailEffectOptimizer(MODEL)
+
+
+def make_tl(width, shard=16, tokens=4096, d_in=4096, name="l"):
+    layer = LayerShape(name, tokens=tokens, d_in=d_in, width=width,
+                       shard_out=shard)
+    cands = analytic_candidates(HW, layer, max_width=int(width * 1.6))
+    return TunableLayer(layer=layer, candidates=cands,
+                        params_per_unit=d_in)
+
+
+@st.composite
+def layer_sets(draw):
+    n = draw(st.integers(2, 8))
+    widths = [draw(st.integers(1024, 16384)) for _ in range(n)]
+    return [make_tl(w, name=f"L{i}") for i, w in enumerate(widths)]
+
+
+class TestLatencyOriented:
+    @given(layers=layer_sets(), tau_frac=st.floats(0.01, 0.2))
+    @settings(max_examples=25, deadline=None)
+    def test_never_increases_latency(self, layers, tau_frac):
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        res = OPT.optimize_latency(layers, tau=tau_frac * total_p,
+                                   delta=0.95)
+        assert res.latency_new_s <= res.latency_old_s + 1e-15
+
+    @given(layers=layer_sets())
+    @settings(max_examples=25, deadline=None)
+    def test_param_gain_bounded_by_final_tau(self, layers):
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        tau = 0.05 * total_p
+        res = OPT.optimize_latency(layers, tau=tau, delta=0.9)
+        # Eq. 7: |PG| stays within the (possibly loosened) tau window, up
+        # to one quantum step of slack (a single balancing move that
+        # improves |PG| may land past the far edge of the window).
+        q_step = max(MODEL.width_quantum(tl.layer.shard_out)
+                     * tl.params_per_unit for tl in layers)
+        assert abs(res.param_gain) < res.tau_final + q_step + 1e-9
+
+    def test_misaligned_layers_gain(self):
+        """Layers just above a wave edge give near-free latency wins."""
+        layers = [make_tl(2048 * k + 256, name=f"L{k}") for k in
+                  range(2, 6)]
+        res = OPT.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert res.latency_reduction > 0.05
+
+    def test_aligned_layers_constraint_respected(self):
+        """At wave-aligned widths there is no FREE gain: any latency win
+        must spend a full wave of parameters, and Eq. 7 keeps the total
+        parameter change inside (-tau, tau)."""
+        layers = [make_tl(2048 * k, name=f"L{k}") for k in range(2, 6)]
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        tau = 0.05 * total_p
+        res = OPT.optimize_latency(layers, tau=tau, delta=0.99999)
+        assert res.latency_new_s <= res.latency_old_s
+        assert -res.tau_final < res.param_gain < res.tau_final
+        for mv in res.moves:
+            if mv.kind == "down":
+                assert mv.latency_gain_s > 0   # no pointless moves
+
+
+class TestAccuracyOriented:
+    @given(layers=layer_sets())
+    @settings(max_examples=25, deadline=None)
+    def test_free_capacity(self, layers):
+        """Eq. 6: params grow, latency never grows (slack=0)."""
+        res = OPT.optimize_accuracy(layers, latency_slack=0.0)
+        assert res.latency_new_s <= res.latency_old_s + 1e-15
+        assert res.param_gain >= 0
+
+    def test_fills_wave(self):
+        layers = [make_tl(11008)]   # deepseek d_ff at TP16: 5.375 waves
+        res = OPT.optimize_accuracy(layers)
+        assert res.new_widths["l"] == 12288   # right edge of wave 6
+        assert res.latency_new_s == pytest.approx(res.latency_old_s)
+
+    def test_slack_buys_wave_jumps(self):
+        layers = [make_tl(2048 * 4, name=f"L{k}") for k in range(3)]
+        res0 = OPT.optimize_accuracy(layers, latency_slack=0.0)
+        res1 = OPT.optimize_accuracy(layers, latency_slack=0.3)
+        assert res1.param_gain > res0.param_gain
+
+
+class TestSnap:
+    @given(width=st.integers(1, 20000))
+    @settings(max_examples=50, deadline=None)
+    def test_snap_relations(self, width):
+        layer = LayerShape("l", 128, 128, width, shard_out=16)
+        c = analytic_candidates(HW, layer, max_width=25000)
+        up, down = snap_up(c, width), snap_down(c, width)
+        if up is not None:
+            assert up > width
+        if down is not None:
+            assert down < width
+        near = snap_nearest(c, width)
+        assert near in c
+
+    def test_discretize_pruning_space(self):
+        layers = [make_tl(8192, name=f"L{i}") for i in range(3)]
+        target = {"L0": 3000, "L1": 5000, "L2": 8000}
+        snapped = discretize_pruning_space(layers, target)
+        for name, w in snapped.items():
+            assert w % (16 * HW.lane) == 0
