@@ -65,6 +65,9 @@ def run(csv_rows: list, verbose: bool = True):
                   f"{moved if moved else '(already wave-aligned)'}")
     dt_us = (time.time() - t0) * 1e6 / max(len(rows), 1)
     best = max(rows, key=lambda r: r[3])
+    # Table-driven engine: one evaluate_batch per tunable layer per call.
     csv_rows.append(("nas_scaleup_table3", f"{dt_us:.1f}",
-                     f"best_free_gain={best[0]}:+{best[3]*100:.2f}%"))
+                     f"best_free_gain={best[0]}:+{best[3]*100:.2f}%;"
+                     f"batched_evals={model.eval_calls}"
+                     f"({model.eval_points}pts)"))
     return rows

@@ -1,0 +1,154 @@
+"""Optimizer scaling: table-driven Algorithm 2 vs the seed scalar path.
+
+Production-size configs (hundreds of tunable layers x thousands of candidate
+widths x up to 8 tau-loosening rounds) made the seed implementation's
+per-point ``evaluate()`` calls the wall-time bottleneck.  This benchmark
+pins the win: a synthetic 64-layer x 1024-candidate transformer scenario
+run through both engines —
+
+  * ``scalar``  — ``repro.core.scalar_ref``: the frozen seed implementation
+    (per-width evaluate calls, sorted-list queues, O(layers) PG rescans);
+  * ``batched`` — ``repro.core.tail_optimizer``: one ``evaluate_batch``
+    table per layer, heap queues, O(1) running PG.
+
+Both must return identical widths/moves (asserted here and property-tested
+in tests/test_batched_equivalence.py).  Results go to
+``BENCH_tail_optimizer.json`` — wall time per phase, evaluate-call counts,
+and the speedup — seeding the repo's perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import (
+    LayerShape, TPU_V5E, TailEffectOptimizer, TunableLayer,
+    WaveQuantizationModel, analytic_candidates,
+)
+from repro.core.scalar_ref import ScalarTailEffectOptimizer, ScalarWaveModel
+
+HW = TPU_V5E
+N_LAYERS = 64
+N_CANDIDATES = 1024
+REPEATS = 3
+
+
+def scenario(n_layers: int = N_LAYERS,
+             n_candidates: int = N_CANDIDATES) -> list[TunableLayer]:
+    """Synthetic transformer: ``n_layers`` unsharded FFN-like layers with
+    deliberately misaligned widths, each with ``n_candidates`` wave-edge
+    candidates (quantum q=128, max width n_candidates*q)."""
+    q = HW.lane  # shard_out=1
+    max_width = n_candidates * q
+    layers = []
+    for i in range(n_layers):
+        # widths spread over the candidate range, never wave-aligned
+        width = q * (n_candidates // 4 + (i * 7) % (n_candidates // 2)) + 37
+        layer = LayerShape(f"ffn{i}", tokens=8192, d_in=8192, width=width,
+                           shard_out=1)
+        cands = analytic_candidates(HW, layer, max_width=max_width)
+        layers.append(TunableLayer(layer=layer, candidates=cands,
+                                   params_per_unit=8192))
+    return layers
+
+
+def _time_best_of(fn, repeats: int = REPEATS):
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def run(csv_rows: list, verbose: bool = True,
+        out_path: str = "BENCH_tail_optimizer.json"):
+    layers = scenario()
+    total_p = sum(tl.params(tl.layer.width) for tl in layers)
+    tau = 0.02 * total_p
+    slack = 0.05
+
+    scalar_model = ScalarWaveModel(HW)
+    scalar_opt = ScalarTailEffectOptimizer(scalar_model)
+    batched_model = WaveQuantizationModel(HW)
+    batched_opt = TailEffectOptimizer(batched_model)
+
+    phases = {}
+    results = {}
+    for phase, scalar_fn, batched_fn in (
+        ("optimize_latency",
+         lambda: scalar_opt.optimize_latency(layers, tau=tau, delta=0.5),
+         lambda: batched_opt.optimize_latency(layers, tau=tau, delta=0.5)),
+        ("optimize_accuracy",
+         lambda: scalar_opt.optimize_accuracy(layers, latency_slack=slack),
+         lambda: batched_opt.optimize_accuracy(layers, latency_slack=slack)),
+    ):
+        scalar_model.eval_calls = scalar_model.eval_points = 0
+        batched_model.eval_calls = batched_model.eval_points = 0
+        t_scalar, res_s = _time_best_of(scalar_fn)
+        s_calls, s_pts = scalar_model.eval_calls, scalar_model.eval_points
+        t_batched, res_b = _time_best_of(batched_fn)
+        b_calls, b_pts = batched_model.eval_calls, batched_model.eval_points
+
+        # the refactor is only a refactor if the answers are identical
+        assert res_s.new_widths == res_b.new_widths, phase
+        assert res_s.moves == res_b.moves, phase
+
+        speedup = t_scalar / t_batched if t_batched > 0 else float("inf")
+        phases[phase] = {
+            "scalar_wall_s": t_scalar,
+            "batched_wall_s": t_batched,
+            "speedup": speedup,
+            # counts are per single run (REPEATS runs were timed)
+            "scalar_eval_calls": s_calls // REPEATS,
+            "scalar_eval_points": s_pts // REPEATS,
+            "batched_eval_calls": b_calls // REPEATS,
+            "batched_eval_points": b_pts // REPEATS,
+        }
+        results[phase] = res_b
+        if verbose:
+            print(f"  {phase:>18}: scalar {t_scalar*1e3:8.2f}ms "
+                  f"({s_pts // REPEATS} evals) -> batched "
+                  f"{t_batched*1e3:8.2f}ms "
+                  f"({b_calls // REPEATS} batch calls, "
+                  f"{b_pts // REPEATS} pts)  {speedup:6.1f}x")
+
+    report = {
+        "benchmark": "optimizer_scale",
+        "scenario": {
+            "n_layers": N_LAYERS,
+            "n_candidates": N_CANDIDATES,
+            "hardware": HW.name,
+            "tau_frac": 0.02,
+            "latency_slack": slack,
+            "repeats": REPEATS,
+        },
+        "phases": phases,
+        "latency_reduction": results["optimize_latency"].latency_reduction,
+        "accuracy_param_gain_frac":
+            results["optimize_accuracy"].param_gain / total_p,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    if verbose:
+        print(f"  wrote {out_path}")
+
+    lat = phases["optimize_latency"]
+    csv_rows.append(("optimizer_scale_64x1024",
+                     f"{lat['batched_wall_s'] * 1e6:.0f}",
+                     f"speedup={lat['speedup']:.1f}x;"
+                     f"acc_speedup={phases['optimize_accuracy']['speedup']:.1f}x;"
+                     f"scalar_evals={lat['scalar_eval_points']};"
+                     f"batched_pts={lat['batched_eval_points']}"))
+    return report
+
+
+if __name__ == "__main__":
+    # PYTHONPATH=src python benchmarks/optimizer_scale.py
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(r))

@@ -53,10 +53,13 @@ def eval_acc(params, steps: int = 8, seed: int = 10_000):
     return float(np.mean(accs))
 
 
+MODEL = WaveQuantizationModel(HW)
+
+
 def model_latency(widths) -> float:
-    model = WaveQuantizationModel(HW)
     shapes = cn.conv_layer_shapes(widths, batch=1, image=IMAGE)
-    return sum(model.evaluate(s).latency_s for s in shapes)
+    return sum(float(MODEL.evaluate_batch(s, [s.width]).latency_s[0])
+               for s in shapes)
 
 
 def tunables(widths, max_scale=1.5):
@@ -101,9 +104,8 @@ def run(csv_rows: list, verbose: bool = True, train_steps: int = 150,
         pruned_b, _ = train(pruned_b, finetune_steps, lr=1e-3)
         wb = [plan_b.widths[n] for n in names]
 
-        # --- ours: Algorithm 2 over the baseline's widths ------------------
-        model = WaveQuantizationModel(HW)
-        opt = TailEffectOptimizer(model)
+        # --- ours: Algorithm 2 over the baseline's widths (table-driven) ---
+        opt = TailEffectOptimizer(MODEL)
         tls = tunables(wb)
         total_p = sum(tl.params(tl.layer.width) for tl in tls)
         res = opt.optimize_latency(tls, tau=0.25 * total_p, delta=0.92)

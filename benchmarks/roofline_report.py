@@ -1,5 +1,7 @@
 """Section Roofline: aggregate the dry-run JSONs into the per-(arch x shape
-x mesh) three-term roofline table used by EXPERIMENTS.md."""
+x mesh) three-term roofline table used by EXPERIMENTS.md.  Also surfaces
+the optimizer perf trajectory (BENCH_tail_optimizer.json) when present, so
+one report covers both the model-quality and engine-speed axes."""
 
 from __future__ import annotations
 
@@ -32,10 +34,25 @@ HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s "
           "|---|---|---|---|---|---|---|---|---|---|---|")
 
 
+def load_perf_trajectory(path: str = "BENCH_tail_optimizer.json"):
+    """The table-driven-optimizer perf record, if the benchmark has run."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def run(csv_rows: list, verbose: bool = True,
         results_dir: str = "results/dryrun"):
     t0 = time.time()
     rows = load(results_dir)
+    perf = load_perf_trajectory()
+    if verbose and perf:
+        lat = perf["phases"]["optimize_latency"]
+        print(f"  optimizer engine: {lat['speedup']:.1f}x vs scalar "
+              f"({lat['batched_wall_s']*1e3:.2f}ms on "
+              f"{perf['scenario']['n_layers']}x"
+              f"{perf['scenario']['n_candidates']})")
     if verbose:
         if not rows:
             print("  (no dry-run results found — run "

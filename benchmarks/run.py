@@ -1,12 +1,23 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json PATH`` additionally writes the rows as machine-readable JSON.
+import argparse
+import json
+import os
 import sys
 
 
-def main() -> None:
-    sys.path.insert(0, "src")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the result rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
     from benchmarks import (
-        nas_scaleup, platform_generality, pruning_opt, roofline_report,
-        staircase, wave_verification,
+        nas_scaleup, optimizer_scale, platform_generality, pruning_opt,
+        roofline_report, staircase, wave_verification,
     )
 
     csv_rows = []
@@ -20,12 +31,21 @@ def main() -> None:
     nas_scaleup.run(csv_rows)
     print("== platform generality (paper Tables 4/5) ==")
     platform_generality.run(csv_rows)
+    print("== optimizer scaling (table-driven vs scalar Algorithm 2) ==")
+    optimizer_scale.run(csv_rows)
     print("== roofline table (EXPERIMENTS.md section Roofline) ==")
     roofline_report.run(csv_rows)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us},{derived}")
+
+    if args.json:
+        rows = [{"name": n, "us_per_call": float(us), "derived": d}
+                for n, us, d in csv_rows]
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -31,13 +31,15 @@ def run(csv_rows: list, verbose: bool = True):
         layer = LayerShape(f"{arch}/ffn", tokens=8192, d_in=cfg.d_model,
                            width=d_ff, shard_out=shard)
         q = model.width_quantum(shard)
-        pt = model.evaluate(layer)
+        # One batched sweep covers the arch's own d_ff (last row) and the
+        # full staircase around it.
+        widths = np.arange(q // 2, d_ff + q + 1, q // 2)
+        table = model.evaluate_batch(layer, np.append(widths, d_ff))
+        pt = table.point(len(table) - 1)
         # position within the wave: 1.0 = right edge (no tail)
         frac = d_ff / (pt.waves * q)
         lines.append((arch, d_ff, q, pt.waves, frac, pt.utilization))
-        widths = np.arange(q // 2, d_ff + q + 1, q // 2)
-        stairs = model.staircase(layer, widths)
-        n_steps = len({round(p.latency_s, 12) for p in stairs})
+        n_steps = int(np.unique(np.round(table.latency_s[:-1], 12)).size)
         if verbose:
             print(f"  {arch:>28} d_ff={d_ff:>6} q={q:>5} waves={pt.waves:>3} "
                   f"wave-fill={frac:5.3f} util={pt.utilization:5.3f} "

@@ -4,7 +4,7 @@ from repro.core.hardware import (
     HardwareSpec, TPU_V5E, TPU_V4, TPU_V5P, TPU_LITE, get_hardware,
 )
 from repro.core.tail_model import (
-    LayerShape, StairPoint, WaveQuantizationModel, GridWaveModel,
+    LayerShape, StairPoint, StairTable, WaveQuantizationModel, GridWaveModel,
     staircase_edges, ceil_div,
 )
 from repro.core.candidates import (
@@ -21,7 +21,8 @@ from repro.core.hlo_analysis import (
 
 __all__ = [
     "HardwareSpec", "TPU_V5E", "TPU_V4", "TPU_V5P", "TPU_LITE",
-    "get_hardware", "LayerShape", "StairPoint", "WaveQuantizationModel",
+    "get_hardware", "LayerShape", "StairPoint", "StairTable",
+    "WaveQuantizationModel",
     "GridWaveModel", "staircase_edges", "ceil_div", "analytic_candidates",
     "profile_candidates", "snap_down", "snap_up", "snap_nearest",
     "TailEffectOptimizer", "TunableLayer", "OptimizationResult", "Move",

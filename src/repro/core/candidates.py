@@ -65,11 +65,10 @@ def profile_candidates(
         return np.array([], dtype=np.int64)
 
     # Segment boundaries: where the score drops (a new, mostly-idle wave).
-    seg_starts = [0]
-    for i in range(1, len(w)):
-        if score[i] < score[i - 1] * (1 - 1e-9):
-            seg_starts.append(i)
-    seg_starts.append(len(w))
+    # Vectorized: one comparison over the diff'd table instead of a Python
+    # scan per point.
+    drops = np.flatnonzero(score[1:] < score[:-1] * (1 - 1e-9)) + 1
+    seg_starts = [0] + drops.tolist() + [len(w)]
 
     out: list[int] = []
     prev_best = -np.inf
@@ -88,15 +87,22 @@ def profile_candidates(
 
 
 def snap_down(candidates: np.ndarray, width: int) -> int | None:
-    """Paper Eq. 8a: max candidate strictly below ``width`` (scale down)."""
-    below = candidates[candidates < width]
-    return int(below.max()) if below.size else None
+    """Paper Eq. 8a: max candidate strictly below ``width`` (scale down).
+
+    ``candidates`` must be sorted ascending (both generators return sorted
+    arrays); the snap is then one binary search, not a mask scan.
+    """
+    i = int(np.searchsorted(candidates, width, side="left"))
+    return int(candidates[i - 1]) if i > 0 else None
 
 
 def snap_up(candidates: np.ndarray, width: int) -> int | None:
-    """Paper Eq. 8b: min candidate strictly above ``width`` (scale up)."""
-    above = candidates[candidates > width]
-    return int(above.min()) if above.size else None
+    """Paper Eq. 8b: min candidate strictly above ``width`` (scale up).
+
+    ``candidates`` must be sorted ascending.
+    """
+    i = int(np.searchsorted(candidates, width, side="right"))
+    return int(candidates[i]) if i < len(candidates) else None
 
 
 def snap_nearest(candidates: np.ndarray, width: int) -> int:

@@ -49,15 +49,16 @@ class LayerProfile:
 
 def analytic_profile(hw: HardwareSpec, layer: LayerShape,
                      widths: Sequence[int]) -> LayerProfile:
+    """One vectorized ``evaluate_batch`` sweep — no per-width Python loop."""
     model = WaveQuantizationModel(hw)
-    pts = model.staircase(layer, widths)
+    t = model.evaluate_batch(layer, widths)
     return LayerProfile(
         name=layer.name,
-        widths=np.array([p.width for p in pts]),
-        latency_s=np.array([p.latency_s for p in pts]),
-        utilization=np.array([p.utilization for p in pts]),
-        throughput=np.array([p.throughput for p in pts]),
-        waves=np.array([p.waves for p in pts]),
+        widths=t.widths,
+        latency_s=t.latency_s,
+        utilization=t.utilization,
+        throughput=t.throughput,
+        waves=t.waves,
         source="analytic",
     )
 
@@ -76,8 +77,11 @@ def hlo_profile(hw: HardwareSpec, layer: LayerShape,
     import jax.numpy as jnp
 
     model = WaveQuantizationModel(hw)
+    # Analytic overlay for the whole sweep in one batched call; the per-width
+    # loop below only pays for compilation + cost_analysis.
+    tbl = model.evaluate_batch(layer, widths)
     lat, util, thr, wav = [], [], [], []
-    for w in widths:
+    for i, w in enumerate(widths):
         x = jax.ShapeDtypeStruct((layer.tokens, layer.d_in), jnp.bfloat16)
         wt = jax.ShapeDtypeStruct((layer.d_in, int(w)), jnp.bfloat16)
         compiled = jax.jit(lambda a, b: a @ b).lower(x, wt).compile()
@@ -85,7 +89,7 @@ def hlo_profile(hw: HardwareSpec, layer: LayerShape,
         if isinstance(ca, (list, tuple)):
             ca = ca[0]
         useful = float(ca.get("flops", 2.0 * layer.tokens * layer.d_in * w))
-        pt = model.evaluate(layer.with_width(int(w)))
+        pt = tbl.point(i)
         lat.append(pt.latency_s)
         util.append(useful / pt.padded_flops if pt.padded_flops else 0.0)
         thr.append(useful / pt.latency_s if pt.latency_s else 0.0)

@@ -20,6 +20,28 @@ levels (see DESIGN.md section 2):
 functions L(width), U(width), T(width) — the quantities the paper profiles
 with nvprof — and ``GridWaveModel`` implements (2) for the Fig. 5
 verification benchmark.
+
+Table-driven evaluation
+-----------------------
+The model is closed-form, so a whole width sweep is one vectorized NumPy
+expression.  ``evaluate_batch(layer, widths)`` returns a ``StairTable`` —
+parallel arrays of latency / utilization / throughput / waves / FLOPs over a
+width vector — and is the primitive everything else is built on:
+
+  * ``evaluate`` is a thin one-width wrapper over ``evaluate_batch``;
+  * ``profiler.analytic_profile`` is ``evaluate_batch`` plus a name tag;
+  * ``latency_batch`` is the latency column alone (bit-identical, fewer
+    array passes) — ``tail_optimizer`` sweeps it once per ``optimize_*``
+    call to build per-layer candidate tables and then runs Algorithm 2
+    entirely on table lookups, never calling back into the model inside
+    its greedy loops.
+
+This mirrors the paper's "Step 1: pre-analysis": profile (here: derive) the
+per-layer L/U/T tables once, then optimize over the tables.  The float
+arithmetic is ordered identically to the historical scalar path, so batched
+results are bit-for-bit equal to per-width evaluation (property-tested in
+tests/test_batched_equivalence.py against the frozen scalar reference in
+``repro.core.scalar_ref``).
 """
 
 from __future__ import annotations
@@ -34,6 +56,14 @@ from repro.core.hardware import HardwareSpec
 
 
 def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _ceil_div_arr(a: np.ndarray, b: int, nonneg: bool) -> np.ndarray:
+    """Elementwise ceil_div; a shift when ``b`` is a power of two and the
+    numerator is known nonnegative (bit-identical, ~2x cheaper)."""
+    if nonneg and b & (b - 1) == 0:
+        return (a + (b - 1)) >> (b.bit_length() - 1)
     return -(-a // b)
 
 
@@ -72,11 +102,52 @@ class StairPoint:
     padded_flops: float     # FLOPs actually executed incl. tile padding
 
 
+@dataclasses.dataclass(frozen=True)
+class StairTable:
+    """One layer's staircase over a width vector: parallel arrays.
+
+    The batched counterpart of ``StairPoint`` — the paper's profiled
+    (width, L, U, T) table, derived in one vectorized shot.
+    """
+
+    widths: np.ndarray        # (n,) int64
+    latency_s: np.ndarray     # (n,) float64
+    utilization: np.ndarray   # (n,) float64
+    throughput: np.ndarray    # (n,) float64
+    waves: np.ndarray         # (n,) int64
+    flops: np.ndarray         # (n,) float64
+    padded_flops: np.ndarray  # (n,) float64
+
+    def __len__(self) -> int:
+        return int(self.widths.size)
+
+    def point(self, i: int) -> StairPoint:
+        return StairPoint(
+            width=int(self.widths[i]),
+            latency_s=float(self.latency_s[i]),
+            utilization=float(self.utilization[i]),
+            throughput=float(self.throughput[i]),
+            waves=int(self.waves[i]),
+            flops=float(self.flops[i]),
+            padded_flops=float(self.padded_flops[i]),
+        )
+
+    def points(self) -> list[StairPoint]:
+        return [self.point(i) for i in range(len(self))]
+
+
 class WaveQuantizationModel:
-    """Closed-form staircase model L(width) = dL * ceil(width / Q)."""
+    """Closed-form staircase model L(width) = dL * ceil(width / Q).
+
+    ``evaluate_batch`` is the primitive; ``evaluate``/``staircase`` are thin
+    wrappers over it.  ``eval_points`` counts widths evaluated since
+    construction (benchmark instrumentation for the table-driven refactor).
+    """
 
     def __init__(self, hw: HardwareSpec):
         self.hw = hw
+        self.eval_calls = 0    # number of evaluate/evaluate_batch calls
+        self.eval_points = 0   # total widths evaluated across those calls
 
     # ---- quanta ---------------------------------------------------------
     def width_quantum(self, shard_out: int) -> int:
@@ -94,51 +165,110 @@ class WaveQuantizationModel:
         per_dev = ceil_div(layer.width, layer.shard_out)
         return ceil_div(per_dev, self.hw.lane)
 
-    def evaluate(self, layer: LayerShape) -> StairPoint:
+    def _staircase_core(self, layer: LayerShape, w: np.ndarray):
+        """Shared vectorized core: (latency, n_waves, padded_per_dev, nonneg).
+
+        The float expressions are ordered exactly as the historical scalar
+        path (see ``repro.core.scalar_ref``) so every element is bit-for-bit
+        equal to evaluating that width alone.  Multiplies/divides by
+        exact-identity factors (shard 1, flop_multiplier 1.0) are skipped
+        and power-of-two ceil-divs become shifts on the nonnegative fast
+        path — bit-identical results, fewer/cheaper array passes.
+        """
         hw = self.hw
         sub = hw.sublane(layer.dtype_bits)
         m_pad = ceil_div(layer.tokens, sub) * sub
         k_pad = self.padded_dim(layer.d_in, layer.shard_in, hw.lane)
-        n_waves = self.waves(layer)
+        nonneg = w.size == 0 or int(w.min()) >= 1
+        per_dev = w if layer.shard_out == 1 else \
+            _ceil_div_arr(w, layer.shard_out, nonneg)
+        n_waves = _ceil_div_arr(per_dev, hw.lane, nonneg)
         n_pad = n_waves * hw.lane
 
-        useful = 2.0 * layer.tokens * layer.d_in * layer.width \
-            * layer.flop_multiplier
         # Per-device padded work (d_in and width divided across shards).
-        padded_per_dev = 2.0 * m_pad * k_pad * n_pad * layer.flop_multiplier
-        padded_total = padded_per_dev * layer.shard_in * layer.shard_out
+        padded_per_dev = 2.0 * m_pad * k_pad * n_pad
+        if layer.flop_multiplier != 1.0:
+            padded_per_dev = padded_per_dev * layer.flop_multiplier
 
         compute_s = padded_per_dev / hw.peak_flops_bf16
-        bytes_per_dev = (
-            m_pad * k_pad + k_pad * n_pad + m_pad * n_pad
-        ) * layer.dtype_bits // 8
+        # == (m_pad*k_pad + k_pad*n_pad + m_pad*n_pad) * bits // 8, with the
+        # n_pad terms factored and the //8 folded into the multiplier for
+        # byte-aligned dtypes (both exact in int64).
+        elems = m_pad * k_pad + (k_pad + m_pad) * n_pad
+        if layer.dtype_bits % 8 == 0:
+            bytes_per_dev = elems * (layer.dtype_bits // 8)
+        else:
+            bytes_per_dev = elems * layer.dtype_bits // 8
         memory_s = bytes_per_dev / hw.hbm_bandwidth
-        latency = max(compute_s, memory_s)
+        latency = np.maximum(compute_s, memory_s)
+        return latency, n_waves, padded_per_dev, nonneg
 
-        util = useful / padded_total if padded_total else 0.0
-        return StairPoint(
-            width=layer.width,
+    def latency_batch(self, layer: LayerShape,
+                      widths: Sequence[int]) -> np.ndarray:
+        """The latency column of ``evaluate_batch`` alone — identical math
+        and bit-identical values, skipping the utilization / throughput /
+        FLOPs columns.  This is the optimizer's table-build fast path (its
+        tables only need L and params)."""
+        w = np.atleast_1d(np.asarray(widths, dtype=np.int64))
+        self.eval_calls += 1
+        self.eval_points += int(w.size)
+        return self._staircase_core(layer, w)[0]
+
+    def evaluate_batch(self, layer: LayerShape,
+                       widths: Sequence[int]) -> StairTable:
+        """Vectorized staircase: one ``StairTable`` over a width vector.
+
+        Every row is bit-for-bit equal to evaluating that width alone (the
+        frozen scalar path in ``repro.core.scalar_ref``).  ``layer.width``
+        is ignored; the sweep variable is ``widths``.
+        """
+        w = np.atleast_1d(np.asarray(widths, dtype=np.int64))
+        self.eval_calls += 1
+        self.eval_points += int(w.size)
+        latency, n_waves, padded_per_dev, nonneg = \
+            self._staircase_core(layer, w)
+
+        useful = 2.0 * layer.tokens * layer.d_in * w
+        if layer.flop_multiplier != 1.0:
+            useful = useful * layer.flop_multiplier
+        padded_total = padded_per_dev
+        if layer.shard_in != 1:
+            padded_total = padded_total * layer.shard_in
+        if layer.shard_out != 1:
+            padded_total = padded_total * layer.shard_out
+
+        if nonneg:
+            # widths >= 1 ⇒ n_pad >= lane ⇒ padded/latency strictly positive
+            util = useful / padded_total
+            thr = useful / latency
+        else:
+            util = np.divide(useful, padded_total,
+                             out=np.zeros_like(useful),
+                             where=padded_total != 0.0)
+            thr = np.divide(useful, latency,
+                            out=np.zeros_like(useful),
+                            where=latency != 0.0)
+        return StairTable(
+            widths=w,
             latency_s=latency,
             utilization=util,
-            throughput=useful / latency if latency else 0.0,
+            throughput=thr,
             waves=n_waves,
             flops=useful,
             padded_flops=padded_total,
         )
 
+    def evaluate(self, layer: LayerShape) -> StairPoint:
+        return self.evaluate_batch(layer, [layer.width]).point(0)
+
     def staircase(
         self, layer: LayerShape, widths: Sequence[int]
     ) -> list[StairPoint]:
-        return [self.evaluate(layer.with_width(int(w))) for w in widths]
+        return self.evaluate_batch(layer, widths).points()
 
     def staircase_arrays(self, layer: LayerShape, widths: Sequence[int]):
-        pts = self.staircase(layer, widths)
-        return (
-            np.array([p.width for p in pts]),
-            np.array([p.latency_s for p in pts]),
-            np.array([p.utilization for p in pts]),
-            np.array([p.throughput for p in pts]),
-        )
+        t = self.evaluate_batch(layer, widths)
+        return t.widths, t.latency_s, t.utilization, t.throughput
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,12 +309,10 @@ def staircase_edges(widths: np.ndarray, latency: np.ndarray) -> np.ndarray:
     These are the paper's profile-derived optimal candidates (Fig. 6: the
     right edge point has max utilization and max throughput within a wave).
     """
-    widths = np.asarray(widths)
+    widths = np.asarray(widths, dtype=np.int64)
     latency = np.asarray(latency)
-    edges = []
-    for i in range(len(widths) - 1):
-        if latency[i + 1] > latency[i] * (1 + 1e-9):
-            edges.append(int(widths[i]))
-    if len(widths):
-        edges.append(int(widths[-1]))
-    return np.array(sorted(set(edges)))
+    if widths.size == 0:
+        return np.array([], dtype=np.int64)
+    rises = latency[1:] > latency[:-1] * (1 + 1e-9)
+    edges = np.append(widths[:-1][rises], widths[-1])
+    return np.unique(edges)

@@ -14,22 +14,68 @@ max-LG layer to *scale down* (Eq. 8a) and balance the parameter budget by
 popping min-LG layers to *scale up* (Eq. 8b); after all layers are adjusted,
 check L_new <= delta * L_old and loosen tau if the target is missed
 (Algorithm 2 line 18).
+
+Table-driven hot path
+---------------------
+This is the paper's own split: "Step 1: pre-analysis" builds per-layer
+L/U/T tables, Algorithm 2 then only *reads* them.  Per ``optimize_*`` call
+we precompute per-layer candidate tables with vectorized
+``WaveQuantizationModel.latency_batch`` sweeps (latency per candidate plus
+the starting width; params are an exact scalar multiply) — after that the
+greedy loops are pure table lookups:
+
+  * sweeps are batched across layers that share a ``LayerShape`` (all
+    fields but width) and chunked to stay cache-resident; latency mode
+    sweeps only each layer's reachable one-step probes (Alg. 2 moves a
+    layer at most one candidate per round), accuracy mode with slack
+    sweeps the full table for its wave-jump walk;
+  * candidate navigation is index ±1 on the sorted-unique width table
+    (Eq. 8a/8b snaps; the only binary searches happen once at build);
+  * the two LG-ranked queues are binary heaps with lazy deletion, keyed on
+    the precomputed LG and tie-broken by layer position so the pop order is
+    identical to the historical sorted-list ``pop(0)``/``pop(-1)``, and the
+    queues plus the per-layer LG estimates are hoisted out of the
+    tau-loosening rounds (only tau changes between rounds);
+  * the Eq. 7 window check keeps PG as an O(1) running sum instead of an
+    O(layers) parameter rescan per move;
+  * accuracy pass 2 keeps each layer's next wave-jump in a max-heap on
+    PG/LG and re-pushes only the moved layer, instead of re-ranking every
+    layer per accepted move.  (Entries are discarded permanently when they
+    fail the budget filter — the budget only shrinks, so they can never
+    become valid again.)
+
+The seed scalar implementation is frozen in ``repro.core.scalar_ref`` and
+``tests/test_batched_equivalence.py`` asserts both paths return identical
+widths and moves; ``benchmarks/optimizer_scale.py`` measures the speedup
+(tens of times faster on optimize_latency, hundreds on optimize_accuracy,
+for a 64-layer x 1024-candidate scenario).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import heapq
+from typing import Sequence
 
 import numpy as np
 
 from repro.core import candidates as cand
 from repro.core.tail_model import LayerShape, WaveQuantizationModel, ceil_div
 
+# Max widths per evaluate_batch sweep: keeps the ~15 elementwise passes of
+# the staircase math inside L2 (4096 widths x 8 B x a few temporaries);
+# larger single sweeps go memory-bound and cost >5x more per point.
+_SWEEP_CHUNK = 4096
+
 
 @dataclasses.dataclass
 class TunableLayer:
-    """One width-adjustable layer handed to the optimizer."""
+    """One width-adjustable layer handed to the optimizer.
+
+    ``candidates`` is normalized to a sorted-unique int64 array at
+    construction (snaps are set-based, so this is behavior-preserving);
+    the optimizer's binary searches rely on it.
+    """
 
     layer: LayerShape
     candidates: np.ndarray
@@ -38,6 +84,12 @@ class TunableLayer:
     params_per_unit: float
     min_width: int = 1
     max_width: int | None = None
+
+    def __post_init__(self):
+        c = np.asarray(self.candidates, dtype=np.int64)
+        if c.size > 1 and not np.all(c[:-1] < c[1:]):
+            c = np.unique(c)
+        self.candidates = c
 
     def params(self, width: int) -> float:
         return self.params_per_unit * width
@@ -92,35 +144,199 @@ class OptimizationResult:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass
+class _LayerTable:
+    """Precomputed candidate table for one tunable layer (Step 1 output).
+
+    Candidates are sorted and de-duplicated, so Eq. 8a/8b snaps from a
+    candidate are just index ±1; the only binary searches happen once at
+    build time (the starting width and the min/max-width fences).
+    """
+
+    tl: TunableLayer
+    pos: int                  # position in the ``layers`` sequence
+    name: str
+    cands: np.ndarray         # sorted unique candidate widths, int64
+    # latency per candidate: a full float64 array (accuracy mode, whose
+    # pass 2 walks many waves up) or a sparse {index: latency} dict holding
+    # just the reachable one-step probes (latency mode — Alg. 2 moves each
+    # layer at most one candidate from its start per round).
+    lat: "np.ndarray | dict[int, float]"
+    lo: int                   # first index with cands[i] >= min_width
+    hi: int                   # last index with cands[i] <= max_width
+    start_width: int
+    start_lat: float
+    start_par: float
+    start_down: int           # index of max candidate < start_width, or -1
+    start_up: int             # index of min candidate > start_width, or n
+
+    def par_at(self, idx: int) -> float:
+        # identical to the historical params(width): one exact scalar
+        # multiply, so no per-candidate params array is materialized
+        return self.tl.params(int(self.cands[idx]))
+
+    def down_from(self, idx: int) -> int | None:
+        """Eq. 8a: next candidate index below cursor (-1 = at start)."""
+        i = self.start_down if idx < 0 else idx - 1
+        return i if i >= self.lo else None
+
+    def up_from(self, idx: int) -> int | None:
+        """Eq. 8b: next candidate index above cursor (-1 = at start)."""
+        i = self.start_up if idx < 0 else idx + 1
+        return i if i <= self.hi else None
+
+
+class _LayerState:
+    """Mutable per-round cursor over a _LayerTable.  ``idx`` is the current
+    candidate index, or -1 while still at the (possibly off-table) starting
+    width."""
+
+    __slots__ = ("table", "idx", "width", "lat", "par")
+
+    def __init__(self, table: _LayerTable):
+        self.table = table
+        self.idx = -1
+        self.width = table.start_width
+        self.lat = table.start_lat
+        self.par = table.start_par
+
+    def move_to(self, idx: int) -> None:
+        t = self.table
+        self.idx = idx
+        self.width = int(t.cands[idx])
+        self.lat = float(t.lat[idx])
+        self.par = t.tl.params(self.width)
+
+    def reset(self) -> None:
+        t = self.table
+        self.idx = -1
+        self.width, self.lat, self.par = (
+            t.start_width, t.start_lat, t.start_par)
+
+    def down(self) -> int | None:
+        return self.table.down_from(self.idx)
+
+    def up(self) -> int | None:
+        return self.table.up_from(self.idx)
+
+
 class TailEffectOptimizer:
-    """Paper Algorithm 2 on the wave-quantization latency model."""
+    """Paper Algorithm 2 over precomputed per-layer candidate tables."""
 
     def __init__(self, model: WaveQuantizationModel):
         self.model = model
 
-    # ---- helpers ---------------------------------------------------------
-    def _latency(self, tl: TunableLayer, width: int) -> float:
-        return self.model.evaluate(tl.layer.with_width(width)).latency_s
+    # ---- Step 1: pre-analysis -------------------------------------------
+    def _build_tables(self, layers: Sequence[TunableLayer],
+                      full: bool = True) -> list[_LayerTable]:
+        """Batched sweeps: candidates + the starting width, per layer.
 
-    def _total_latency(self, layers: Sequence[TunableLayer],
-                       widths: dict[str, int]) -> float:
-        return sum(self._latency(tl, widths[tl.layer.name]) for tl in layers)
+        The staircase math is elementwise in width, so layers that share
+        every ``LayerShape`` field except width (a transformer stack, say)
+        are swept in ONE ``latency_batch`` call over their concatenated
+        width vectors — bit-identical rows, one NumPy dispatch.
 
-    def _total_params(self, layers: Sequence[TunableLayer],
-                      widths: dict[str, int]) -> float:
-        return sum(tl.params(widths[tl.layer.name]) for tl in layers)
+        ``full=False`` (latency mode) sweeps only each layer's reachable
+        one-step probes instead of its whole candidate table — Algorithm 2's
+        latency rounds move a layer at most one candidate from its start
+        (one Eq. 8a down-step or one Eq. 8b up-step), so anything further
+        is never read.  Accuracy mode needs ``full=True`` for its wave-jump
+        walk (pass 2).
+        """
+        prepped = []
+        groups: dict[tuple, list[int]] = {}
+        for pos, tl in enumerate(layers):
+            cands = tl.candidates  # sorted unique (TunableLayer init)
+            n = int(cands.size)
+            start_w = int(tl.layer.width)
+            if n == 0:
+                sd, su, lo, hi = -1, 0, 0, -1
+            else:
+                # one binary search for the start cursor; the min/max
+                # fences only need a search when they cut into the table
+                i = int(cands.searchsorted(start_w, side="left"))
+                sd = i - 1
+                su = i + 1 if (i < n and int(cands[i]) == start_w) else i
+                lo = (0 if tl.min_width <= int(cands[0]) else
+                      int(cands.searchsorted(tl.min_width, side="left")))
+                hi = (n - 1 if (tl.max_width is None
+                                or tl.max_width >= int(cands[-1])) else
+                      int(cands.searchsorted(tl.max_width,
+                                             side="right")) - 1)
+            sl = tl.layer
+            key = (sl.tokens, sl.d_in, sl.shard_in, sl.shard_out,
+                   sl.dtype_bits, sl.flop_multiplier)
+            groups.setdefault(key, []).append(pos)
+            prepped.append((tl, cands, start_w, sd, su, lo, hi))
 
-    def _down(self, tl: TunableLayer, width: int) -> int | None:
-        w = cand.snap_down(tl.candidates, width)
-        if w is not None and w < tl.min_width:
-            return None
-        return w
+        lats: list = [None] * len(prepped)      # full array or sparse dict
+        start_lats: list = [0.0] * len(prepped)
+        for idxs in groups.values():
+            ref_layer = prepped[idxs[0]][0].layer
+            if full:
+                # whole candidate sweep per layer + starts as a tail block
+                arrs = [prepped[i][1] for i in idxs]
+                widths = np.concatenate(
+                    arrs + [np.array([prepped[i][2] for i in idxs],
+                                     dtype=np.int64)])
+            else:
+                # latency mode: Alg. 2 only ever probes one step down
+                # (Eq. 8a) and one step up (Eq. 8b) from the start — sweep
+                # exactly the reachable probes, not the whole table.
+                probe_idx = []
+                wl = []
+                for i in idxs:
+                    _, cands, start_w, sd, su, lo, hi = prepped[i]
+                    # mirror down_from/up_from reachability exactly: the
+                    # down-step only honours the min fence, the up-step
+                    # only the max fence
+                    probes = ([sd] if sd >= lo else []) \
+                        + ([su] if su <= hi else [])
+                    probe_idx.append(probes)
+                    wl.extend(int(cands[j]) for j in probes)
+                    wl.append(start_w)
+                widths = np.asarray(wl, dtype=np.int64)
+            # Chunked so each sweep's working set stays cache-resident —
+            # one giant elementwise pass goes memory-bound and costs
+            # several times more per point.
+            lat_all = np.concatenate([
+                self.model.latency_batch(ref_layer,
+                                         widths[o:o + _SWEEP_CHUNK])
+                for o in range(0, widths.size, _SWEEP_CHUNK)
+            ]) if widths.size > _SWEEP_CHUNK else \
+                self.model.latency_batch(ref_layer, widths)
+            if full:
+                off = 0
+                starts_at = int(widths.size) - len(idxs)  # tail block
+                for j, i in enumerate(idxs):
+                    n = prepped[i][1].size
+                    lats[i] = lat_all[off:off + n]
+                    off += n
+                    start_lats[i] = float(lat_all[starts_at + j])
+            else:
+                off = 0
+                for j, i in enumerate(idxs):
+                    probes = probe_idx[j]
+                    lats[i] = {p: float(lat_all[off + k])
+                               for k, p in enumerate(probes)}
+                    off += len(probes)
+                    start_lats[i] = float(lat_all[off])
+                    off += 1
 
-    def _up(self, tl: TunableLayer, width: int) -> int | None:
-        w = cand.snap_up(tl.candidates, width)
-        if w is not None and tl.max_width is not None and w > tl.max_width:
-            return None
-        return w
+        tables = []
+        for pos, (tl, cands, start_w, sd, su, lo, hi) in enumerate(prepped):
+            tables.append(_LayerTable(
+                tl=tl, pos=pos, name=tl.layer.name,
+                cands=cands,
+                lat=lats[pos] if lats[pos] is not None else {},
+                lo=lo, hi=hi,
+                start_width=start_w,
+                start_lat=start_lats[pos],
+                start_par=tl.params(start_w),
+                start_down=sd,
+                start_up=su,
+            ))
+        return tables
 
     # ---- latency-oriented (Eq. 7, Algorithm 2) ----------------------------
     def optimize_latency(
@@ -133,16 +349,40 @@ class TailEffectOptimizer:
         """Maximize sum LG subject to sum PG in (-tau, tau); retry with
         loosened tau until L_new <= delta * L_old (Algorithm 2 lines 15-18).
 
-        ``tau`` is in absolute parameter counts.
+        ``tau`` is in absolute parameter counts.  The candidate tables are
+        built once (reachable probes only — latency mode) and shared by
+        every tau-loosening round.
         """
-        old_widths = {tl.layer.name: tl.layer.width for tl in layers}
-        l_old = self._total_latency(layers, old_widths)
-        p_old = self._total_params(layers, old_widths)
+        tables = self._build_tables(layers, full=False)
+        old_widths = {t.name: t.start_width for t in tables}
+        l_old = sum(t.start_lat for t in tables)
+        p_old = sum(t.start_par for t in tables)
+
+        # Round-invariant state, hoisted out of the tau-loosening loop:
+        # every round starts from the same widths, so the per-layer LG
+        # estimates (Alg. 2 line 6) and the LG-ranked queues are identical —
+        # only tau changes between rounds.
+        states = [_LayerState(t) for t in tables]
+        lg = []
+        for t in tables:
+            di = t.down_from(-1)
+            lg.append(float(t.start_lat - t.lat[di]) if di is not None
+                      else 0.0)
+        # The historical implementation kept ONE list sorted descending by
+        # LG (stable, so ties keep layer order) and popped max-LG from the
+        # front / min-LG from the back.  Two heaps with lazy deletion
+        # reproduce that exact pop sequence: ties at the front go to the
+        # lowest layer position, ties at the back to the highest.
+        base_down = [(-lg[i], i) for i in range(len(tables))]
+        base_up = [(lg[i], -i) for i in range(len(tables))]
+        heapq.heapify(base_down)
+        heapq.heapify(base_up)
 
         best: OptimizationResult | None = None
         cur_tau = tau
         for _ in range(max_rounds):
-            res = self._one_latency_round(layers, old_widths, l_old, p_old,
+            res = self._one_latency_round(tables, states, lg, base_down,
+                                          base_up, old_widths, l_old, p_old,
                                           cur_tau, delta)
             if best is None or res.latency_new_s < best.latency_new_s:
                 best = res
@@ -152,65 +392,91 @@ class TailEffectOptimizer:
         assert best is not None
         return best
 
-    def _one_latency_round(self, layers, old_widths, l_old, p_old, tau,
+    def _one_latency_round(self, tables, states, lg, base_down, base_up,
+                           old_widths, l_old, p_old, tau,
                            delta) -> OptimizationResult:
-        widths = dict(old_widths)
+        for s in states:
+            s.reset()
         moves: list[Move] = []
+        pg = 0.0  # running sum PG (Eq. 7 window), exact for integer params
 
-        # Per-layer LG/PG estimates for one scale-down step (Alg. 2 line 6).
-        lg: dict[str, float] = {}
-        for tl in layers:
-            name = tl.layer.name
-            down = self._down(tl, widths[name])
-            lg[name] = (self._latency(tl, widths[name])
-                        - self._latency(tl, down)) if down is not None else 0.0
+        down_heap = list(base_down)  # a copy of a heap is a valid heap
+        up_heap = list(base_up)
+        consumed = [False] * len(tables)
+        remaining = len(tables)
 
-        by_name = {tl.layer.name: tl for tl in layers}
-        # Queue ranked by LG (Alg. 2 line 7).  Layers appear once each.
-        queue = sorted(lg, key=lambda n: lg[n], reverse=True)
+        def pop_max_lg() -> int | None:
+            while down_heap:
+                _, i = heapq.heappop(down_heap)
+                if not consumed[i]:
+                    return i
+            return None
 
-        def pg_total() -> float:
-            return (self._total_params(layers, widths) - p_old)
+        def pop_min_lg() -> int | None:
+            while up_heap:
+                _, neg = heapq.heappop(up_heap)
+                i = -neg
+                if not consumed[i]:
+                    return i
+            return None
 
-        while queue:
-            j = queue.pop(0)                 # Argmax LG (line 9)
-            tl = by_name[j]
-            down = self._down(tl, widths[j])
+        while remaining > 0:
+            j = pop_max_lg()                 # Argmax LG (line 9)
+            consumed[j] = True
+            remaining -= 1
+            sj = states[j]
+            tj = tables[j]
+            di = sj.down()
             applied_down = False
-            old_w = widths[j]
-            if down is not None and lg[j] > 0:
-                gain = self._latency(tl, widths[j]) - self._latency(tl, down)
-                dp = tl.params(down) - tl.params(widths[j])
-                moves.append(Move(j, "down", widths[j], down, gain, dp))
-                widths[j] = down
+            dp_down = 0.0
+            if di is not None and lg[j] > 0:
+                gain = sj.lat - float(tj.lat[di])
+                dp_down = tj.par_at(di) - sj.par
+                moves.append(Move(tj.name, "down", sj.width,
+                                  int(tj.cands[di]), gain, dp_down))
+                sj.move_to(di)
+                pg += dp_down
                 applied_down = True
 
             # Balance PG by scaling up min-LG layers (lines 11-13).
-            while queue and not (-tau < pg_total() < tau):
-                k = queue.pop(-1)            # Argmin LG (line 12)
-                tk = by_name[k]
-                up = self._up(tk, widths[k])
-                if up is None:
+            while remaining > 0 and not (-tau < pg < tau):
+                k = pop_min_lg()             # Argmin LG (line 12)
+                consumed[k] = True
+                remaining -= 1
+                sk = states[k]
+                tk = tables[k]
+                ui = sk.up()
+                if ui is None:
                     continue
-                dp = tk.params(up) - tk.params(widths[k])
+                dp = tk.par_at(ui) - sk.par
                 # only balance if the move brings PG closer to the window
-                if abs(pg_total() + dp) >= abs(pg_total()):
+                if abs(pg + dp) >= abs(pg):
                     continue
-                extra = self._latency(tk, up) - self._latency(tk, widths[k])
-                moves.append(Move(k, "up", widths[k], up, -extra, dp))
-                widths[k] = up
+                extra = float(tk.lat[ui]) - sk.lat
+                moves.append(Move(tk.name, "up", sk.width,
+                                  int(tk.cands[ui]), -extra, dp))
+                sk.move_to(ui)
+                pg += dp
 
             # Eq. 7 is a hard constraint: if no up-candidates remain to
-            # balance this scale-down, revert it.
-            if applied_down and not (-tau < pg_total() < tau):
-                widths[j] = old_w
+            # balance this scale-down, revert it.  Seed-faithful quirk: if
+            # the balance loop applied up-moves after this down-move, the
+            # unconditional pop() drops the LAST (up) Move record rather
+            # than the down-Move, so ``moves`` can disagree with
+            # ``new_widths``.  Kept verbatim because this PR's contract is
+            # exact parity with the frozen scalar path (see ROADMAP open
+            # items for the coordinated fix).
+            if applied_down and not (-tau < pg < tau):
+                sj.reset()
+                pg -= dp_down
                 moves.pop()
 
-        l_new = self._total_latency(layers, widths)
+        l_new = sum(s.lat for s in states)
+        widths = {s.table.name: s.width for s in states}
         return OptimizationResult(
             old_widths=dict(old_widths), new_widths=widths,
             latency_old_s=l_old, latency_new_s=l_new,
-            params_old=p_old, params_new=self._total_params(layers, widths),
+            params_old=p_old, params_new=p_old + pg,
             moves=moves, tau_final=tau,
             satisfied=l_new <= l_old * delta,
         )
@@ -227,55 +493,71 @@ class TailEffectOptimizer:
         by construction latency is unchanged (same wave) and capacity grows
         for free (the paper's EfficientNet move, Table 3).  Pass 2 greedily
         spends any remaining latency slack on full wave jumps, largest
-        PG-per-latency first.
+        PG-per-latency first, via a max-heap over each layer's next jump.
+
+        With no slack there is no pass-2 walk, so only the one-step probes
+        are swept (``full=False``); with slack the walk can climb many
+        waves and needs the whole table.
         """
-        old_widths = {tl.layer.name: tl.layer.width for tl in layers}
-        l_old = self._total_latency(layers, old_widths)
-        p_old = self._total_params(layers, old_widths)
+        tables = self._build_tables(layers, full=latency_slack > 0)
+        old_widths = {t.name: t.start_width for t in tables}
+        l_old = sum(t.start_lat for t in tables)
+        p_old = sum(t.start_par for t in tables)
         budget = latency_slack * l_old
 
-        widths = dict(old_widths)
+        states = [_LayerState(t) for t in tables]
         moves: list[Move] = []
-        for tl in layers:
-            name = tl.layer.name
-            up = self._up(tl, widths[name])
-            if up is None:
+        for s in states:
+            t = s.table
+            ui = s.up()
+            if ui is None:
                 continue
-            extra = self._latency(tl, up) - self._latency(tl, widths[name])
+            extra = float(t.lat[ui]) - s.lat
             if extra <= 1e-15:  # same wave: free capacity
-                dp = tl.params(up) - tl.params(widths[name])
-                moves.append(Move(name, "up", widths[name], up, -extra, dp))
-                widths[name] = up
+                dp = t.par_at(ui) - s.par
+                moves.append(Move(t.name, "up", s.width,
+                                  int(t.cands[ui]), -extra, dp))
+                s.move_to(ui)
 
-        # Pass 2: spend the slack budget on wave jumps.
-        improved = True
-        while improved and budget > 0:
-            improved = False
-            ranked: list[tuple[float, TunableLayer, int, float]] = []
-            for tl in layers:
-                name = tl.layer.name
-                up = self._up(tl, widths[name])
-                if up is None:
-                    continue
-                extra = self._latency(tl, up) - self._latency(tl, widths[name])
-                dp = tl.params(up) - tl.params(widths[name])
-                if extra <= budget and dp > 0:
-                    ranked.append((dp / max(extra, 1e-15), tl, up, extra))
-            if ranked:
-                ranked.sort(key=lambda t: t[0], reverse=True)
-                _, tl, up, extra = ranked[0]
-                name = tl.layer.name
-                dp = tl.params(up) - tl.params(widths[name])
-                moves.append(Move(name, "up", widths[name], up, -extra, dp))
-                widths[name] = up
-                budget -= extra
-                improved = True
+        # Pass 2: spend the slack budget on wave jumps.  Each layer has one
+        # live heap entry — its next jump; a popped entry that exceeds the
+        # (monotonically shrinking) budget or has dp <= 0 can never become
+        # valid again and is dropped for good.
+        heap: list[tuple[float, int, int, float, float]] = []
 
-        l_new = self._total_latency(layers, widths)
+        def push_next(i: int) -> None:
+            s = states[i]
+            t = s.table
+            ui = s.up()
+            if ui is None:
+                return
+            extra = float(t.lat[ui]) - s.lat
+            dp = t.par_at(ui) - s.par
+            ratio = dp / max(extra, 1e-15)
+            heapq.heappush(heap, (-ratio, i, ui, extra, dp))
+
+        if budget > 0:
+            for i in range(len(states)):
+                push_next(i)
+        while heap and budget > 0:
+            _, i, ui, extra, dp = heapq.heappop(heap)
+            if extra > budget or dp <= 0:
+                continue
+            s = states[i]
+            t = s.table
+            moves.append(Move(t.name, "up", s.width,
+                              int(t.cands[ui]), -extra, dp))
+            s.move_to(ui)
+            budget -= extra
+            push_next(i)
+
+        l_new = sum(s.lat for s in states)
+        p_new = sum(s.par for s in states)
+        widths = {s.table.name: s.width for s in states}
         return OptimizationResult(
             old_widths=old_widths, new_widths=widths,
             latency_old_s=l_old, latency_new_s=l_new,
-            params_old=p_old, params_new=self._total_params(layers, widths),
+            params_old=p_old, params_new=p_new,
             moves=moves, tau_final=0.0,
             satisfied=l_new <= l_old * (1 + latency_slack) + 1e-12,
         )

@@ -75,28 +75,35 @@ class ServeEngine:
         generated = [cur]
         done = np.zeros(b, bool)
         steps = 0
+        # Decode-loop invariants, hoisted: sampling config never changes
+        # across steps, and the per-step host sync (np.asarray) is only
+        # needed when some request can actually stop early on an eos.
+        any_temp = any(r.temperature > 0 for r in reqs)
+        if any_temp:
+            temp = jnp.asarray([max(r.temperature, 1e-6)
+                                for r in reqs])[:, None]
+            use_t = jnp.asarray([r.temperature > 0 for r in reqs])
+        track_eos = any(r.eos_id >= 0 for r in reqs)
         for t in range(max_new - 1):
             pos = jnp.asarray(plen + t, jnp.int32)
             logits, states = self._decode(self.params, cur, pos, states)
             logits = logits[:, :cfg.vocab_size]
-            if any(r.temperature > 0 for r in reqs):
+            if any_temp:
                 self.rng, sub = jax.random.split(self.rng)
-                temp = jnp.asarray([max(r.temperature, 1e-6)
-                                    for r in reqs])[:, None]
                 nxt = jax.random.categorical(sub, logits / temp, axis=-1)
                 greedy = jnp.argmax(logits, axis=-1)
-                use_t = jnp.asarray([r.temperature > 0 for r in reqs])
                 cur = jnp.where(use_t, nxt, greedy).astype(jnp.int32)
             else:
                 cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             generated.append(cur)
             steps += 1
-            host = np.asarray(cur)
-            for i, r in enumerate(reqs):
-                if r.eos_id >= 0 and host[i] == r.eos_id:
-                    done[i] = True
-            if done.all():
-                break
+            if track_eos:
+                host = np.asarray(cur)
+                for i, r in enumerate(reqs):
+                    if r.eos_id >= 0 and host[i] == r.eos_id:
+                        done[i] = True
+                if done.all():
+                    break
 
         gen = np.stack([np.asarray(g) for g in generated], axis=1)
         results = []

@@ -1,0 +1,112 @@
+"""Minimal stand-in for ``hypothesis`` on environments without it.
+
+The repo's property tests use a small surface of hypothesis —
+``given``/``settings`` and the ``integers``/``floats``/``sampled_from``/
+``composite`` strategies.  When the real package is importable the test
+modules use it; otherwise they fall back to this shim, which draws a fixed
+number of pseudo-random examples from a deterministic per-test seed so the
+suite still collects and exercises the properties on minimal environments.
+
+This is NOT a replacement for hypothesis: there is no shrinking, no edge-case
+bias, and no example database.  It exists so `pytest -q` works out of the box.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def lists(element: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [element.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def composite(fn):
+    """``@st.composite`` — fn's first arg becomes the draw callable."""
+
+    def builder(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+        return _Strategy(draw_value)
+
+    return builder
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Records max_examples on the test function for ``given`` to read."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # propagate a max_examples set by an outer @settings
+        if hasattr(fn, "_fallback_max_examples"):
+            wrapper._fallback_max_examples = fn._fallback_max_examples
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+
+
+st = _StrategiesModule()

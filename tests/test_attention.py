@@ -4,12 +4,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.kernels import ref
 from repro.models.attention import (
     chunked_attention, decode_attention, local_attention_prefill,
 )
+
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
 
 
 def rand(key, shape):

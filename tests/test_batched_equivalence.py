@@ -1,0 +1,196 @@
+"""Batched-vs-scalar equivalence: the table-driven engine is a pure
+refactor of the seed scalar path (frozen in repro.core.scalar_ref).
+
+ * ``evaluate_batch`` rows must equal per-width scalar evaluation
+   bit-for-bit — same float op order, so not approx: ``==``.
+ * The table-driven Algorithm 2 must return identical widths and moves to
+   the seed implementation on the same scenarios.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    LayerShape, TPU_LITE, TPU_V5E, TailEffectOptimizer, TunableLayer,
+    WaveQuantizationModel, analytic_candidates, staircase_edges,
+)
+from repro.core.scalar_ref import (
+    ScalarTailEffectOptimizer, ScalarWaveModel, scalar_evaluate,
+)
+
+HW = TPU_V5E
+MODEL = WaveQuantizationModel(HW)
+OPT = TailEffectOptimizer(MODEL)
+SCALAR_OPT = ScalarTailEffectOptimizer(ScalarWaveModel(HW))
+
+
+@st.composite
+def layer_shapes(draw):
+    return LayerShape(
+        name="l",
+        tokens=draw(st.integers(1, 10000)),
+        d_in=draw(st.integers(1, 10000)),
+        width=draw(st.integers(1, 50000)),
+        shard_in=draw(st.sampled_from([1, 2, 4, 8, 16])),
+        shard_out=draw(st.sampled_from([1, 2, 3, 4, 8, 16])),
+        dtype_bits=draw(st.sampled_from([16, 32])),
+        flop_multiplier=draw(st.sampled_from([1.0, 0.5, 3.0])),
+    )
+
+
+def make_tl(width, shard=16, tokens=4096, d_in=4096, name="l",
+            min_width=1, max_width=None):
+    layer = LayerShape(name, tokens=tokens, d_in=d_in, width=width,
+                       shard_out=shard)
+    cands = analytic_candidates(HW, layer, max_width=int(width * 1.6))
+    return TunableLayer(layer=layer, candidates=cands, params_per_unit=d_in,
+                        min_width=min_width, max_width=max_width)
+
+
+@st.composite
+def layer_sets(draw):
+    n = draw(st.integers(2, 8))
+    out = []
+    for i in range(n):
+        w = draw(st.integers(1024, 16384))
+        min_w = draw(st.sampled_from([1, 2048]))
+        max_w = draw(st.sampled_from([None, int(w * 1.3)]))
+        out.append(make_tl(w, name=f"L{i}", min_width=min_w,
+                           max_width=max_w))
+    return out
+
+
+class TestEvaluateBatchEquivalence:
+    @given(layer=layer_shapes(), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_bit_for_bit(self, layer, seed):
+        """Every StairTable row equals the scalar evaluation of that width —
+        exact equality, not approx."""
+        rng = np.random.default_rng(seed)
+        widths = rng.integers(1, 60000, size=13)
+        table = MODEL.evaluate_batch(layer, widths)
+        for i, w in enumerate(widths):
+            assert scalar_evaluate(HW, layer.with_width(int(w))) \
+                == table.point(i)
+
+    @given(layer=layer_shapes())
+    @settings(max_examples=40, deadline=None)
+    def test_evaluate_wrapper(self, layer):
+        """``evaluate`` (thin wrapper) equals the scalar path."""
+        assert MODEL.evaluate(layer) == scalar_evaluate(HW, layer)
+
+    @given(layer=layer_shapes(), seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_latency_batch_column(self, layer, seed):
+        """``latency_batch`` is exactly the latency column of
+        ``evaluate_batch``."""
+        rng = np.random.default_rng(seed)
+        widths = rng.integers(1, 60000, size=13)
+        np.testing.assert_array_equal(
+            MODEL.latency_batch(layer, widths),
+            MODEL.evaluate_batch(layer, widths).latency_s)
+
+    def test_other_hardware(self):
+        m = WaveQuantizationModel(TPU_LITE)
+        layer = LayerShape("l", tokens=32, d_in=48, width=1, shard_out=1)
+        widths = np.arange(1, 400, 7)
+        table = m.evaluate_batch(layer, widths)
+        for i, w in enumerate(widths):
+            assert scalar_evaluate(TPU_LITE, layer.with_width(int(w))) \
+                == table.point(i)
+
+    def test_staircase_edges_matches_scan(self):
+        """Vectorized edge detection equals the historical Python scan."""
+        layer = LayerShape("l", tokens=2048, d_in=1024, width=1,
+                           shard_out=16)
+        widths = np.arange(256, 8193, 256)
+        table = MODEL.evaluate_batch(layer, widths)
+        lat = table.latency_s
+        scan = []
+        for i in range(len(widths) - 1):
+            if lat[i + 1] > lat[i] * (1 + 1e-9):
+                scan.append(int(widths[i]))
+        scan.append(int(widths[-1]))
+        np.testing.assert_array_equal(
+            staircase_edges(widths, lat), np.array(sorted(set(scan))))
+
+
+class TestOptimizerParity:
+    @given(layers=layer_sets(), tau_frac=st.floats(0.01, 0.2))
+    @settings(max_examples=20, deadline=None)
+    def test_latency_parity(self, layers, tau_frac):
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        a = SCALAR_OPT.optimize_latency(layers, tau=tau_frac * total_p,
+                                        delta=0.95)
+        b = OPT.optimize_latency(layers, tau=tau_frac * total_p, delta=0.95)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+        assert a.latency_new_s == b.latency_new_s
+        assert a.tau_final == b.tau_final
+        assert a.satisfied == b.satisfied
+        assert a.params_new == pytest.approx(b.params_new)
+
+    @given(layers=layer_sets(),
+           slack=st.sampled_from([0.0, 0.05, 0.3]))
+    @settings(max_examples=20, deadline=None)
+    def test_accuracy_parity(self, layers, slack):
+        a = SCALAR_OPT.optimize_accuracy(layers, latency_slack=slack)
+        b = OPT.optimize_accuracy(layers, latency_slack=slack)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+        assert a.latency_new_s == b.latency_new_s
+
+    # The deterministic scenarios from test_tail_optimizer.py, pinned to the
+    # seed behaviour.
+    def test_misaligned_scenario_parity(self):
+        layers = [make_tl(2048 * k + 256, name=f"L{k}") for k in range(2, 6)]
+        a = SCALAR_OPT.optimize_latency(layers, tau=1e9, delta=0.95)
+        b = OPT.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+
+    def test_aligned_scenario_parity(self):
+        layers = [make_tl(2048 * k, name=f"L{k}") for k in range(2, 6)]
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        a = SCALAR_OPT.optimize_latency(layers, tau=0.05 * total_p,
+                                        delta=0.99999)
+        b = OPT.optimize_latency(layers, tau=0.05 * total_p, delta=0.99999)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+
+    def test_fills_wave_scenario_parity(self):
+        layers = [make_tl(11008)]
+        a = SCALAR_OPT.optimize_accuracy(layers)
+        b = OPT.optimize_accuracy(layers)
+        assert b.new_widths["l"] == 12288   # right edge of wave 6 (seed pin)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+
+    def test_tables_reused_across_rounds(self):
+        """The tau-loosening rounds must not rebuild tables, and latency
+        mode sweeps only the reachable one-step probes: at most the start
+        width plus its Eq. 8a/8b neighbours per layer, once per
+        optimize_latency call, however many rounds run."""
+        model = WaveQuantizationModel(HW)
+        opt = TailEffectOptimizer(model)
+        layers = [make_tl(2048 * k, name=f"L{k}") for k in range(2, 6)]
+        model.eval_calls = model.eval_points = 0
+        opt.optimize_latency(layers, tau=1.0, delta=0.0)  # forces 8 rounds
+        assert model.eval_points <= 3 * len(layers)
+        assert model.eval_calls <= len(layers)
+
+    def test_accuracy_full_table_points(self):
+        """Accuracy mode with slack walks waves, so it sweeps the whole
+        candidate table exactly once."""
+        model = WaveQuantizationModel(HW)
+        opt = TailEffectOptimizer(model)
+        layers = [make_tl(2048 * k, name=f"L{k}") for k in range(2, 6)]
+        model.eval_calls = model.eval_points = 0
+        opt.optimize_accuracy(layers, latency_slack=0.2)
+        assert model.eval_points == sum(
+            len(tl.candidates) + 1 for tl in layers)

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# full XLA compiles in subprocesses: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
+
 PREAMBLE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

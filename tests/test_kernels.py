@@ -7,6 +7,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

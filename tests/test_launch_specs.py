@@ -5,7 +5,11 @@ import dataclasses
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.configs import SHAPES, get_config, list_archs
 from repro.models.transformer import VOCAB_QUANTUM, padded_vocab

@@ -14,6 +14,9 @@ from repro.models import (
 )
 from repro.models.transformer import forward, padded_vocab
 
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 B, S = 2, 32
 

@@ -4,9 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.models import moe as moe_lib
+
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
 
 
 def setup_moe(d=32, e=8, f=64, shared=False, key=0):

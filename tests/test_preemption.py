@@ -8,6 +8,10 @@ import sys
 import time
 
 from repro.train import checkpoint
+import pytest
+
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
 
 
 def _launch(ckpt_dir: str, steps: int):

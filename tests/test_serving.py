@@ -8,6 +8,9 @@ from repro.configs import get_config, reduced_config
 from repro.models import init_params
 from repro.serving import Request, ServeEngine
 
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine():
@@ -64,3 +67,22 @@ def test_overflowing_slots(engine):
     assert len(out) == 6
     for r in out:
         assert len(r.tokens) == 4
+
+
+def test_mixed_temperature_batch(engine):
+    """Greedy slots in a mixed greedy/sampled batch must match a pure
+    greedy run (the hoisted use_t/temp arrays select per slot)."""
+    eng, cfg = engine
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+               for _ in range(3)]
+    greedy = eng.generate([Request(prompt=p, max_new_tokens=6)
+                           for p in prompts])
+    mixed = eng.generate([
+        Request(prompt=prompts[0], max_new_tokens=6),
+        Request(prompt=prompts[1], max_new_tokens=6, temperature=1.0),
+        Request(prompt=prompts[2], max_new_tokens=6),
+    ])
+    np.testing.assert_array_equal(mixed[0].tokens, greedy[0].tokens)
+    np.testing.assert_array_equal(mixed[2].tokens, greedy[2].tokens)
+    assert (mixed[1].tokens < cfg.vocab_size).all()

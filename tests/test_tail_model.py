@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.core import (
     GridWaveModel, LayerShape, TPU_V5E, TPU_V4, WaveQuantizationModel,

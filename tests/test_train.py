@@ -16,6 +16,9 @@ from repro.train import (
 )
 from repro.train.optim import dequantize_q8, quantize_q8
 
+# full XLA compiles: quick tier skips with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def small_setup(arch="qwen1.5-0.5b", steps_lr=100, **tc_kw):
     cfg = reduced_config(get_config(arch))
