@@ -1,20 +1,76 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV;
 # ``--json PATH`` additionally writes the rows as machine-readable JSON.
+# ``--check`` reruns only the optimizer-scale benchmark and exits nonzero
+# when any phase speedup regresses >30% versus the committed
+# BENCH_tail_optimizer.json (the perf regression gate for the table-driven
+# engine; see ROADMAP "Quick tier").
 import argparse
 import json
 import os
 import sys
+import tempfile
+
+# Fresh speedups may be at most this fraction of the committed value
+# before --check fails (speedup ratios are far more stable than absolute
+# wall times on shared machines, but still leave 30% slack).
+CHECK_TOLERANCE = 0.7
+
+
+def run_check(root: str) -> int:
+    """Rerun optimizer_scale; compare per-phase speedups to the committed
+    BENCH_tail_optimizer.json.  Returns a process exit code."""
+    from benchmarks import optimizer_scale
+
+    committed_path = os.path.join(root, "BENCH_tail_optimizer.json")
+    with open(committed_path) as f:
+        committed = json.load(f)
+
+    # Never clobber the committed trajectory file during a check run.
+    with tempfile.TemporaryDirectory() as d:
+        fresh = optimizer_scale.run([], verbose=True,
+                                    out_path=os.path.join(d, "fresh.json"))
+
+    failures = []
+    for phase, entry in committed.get("phases", {}).items():
+        for key in sorted(entry):
+            if not key.endswith("speedup"):
+                continue
+            want = entry[key]
+            got = fresh.get("phases", {}).get(phase, {}).get(key)
+            if want is None or got is None:
+                continue
+            label = phase if key == "speedup" else f"{phase}:{key}"
+            floor = want * CHECK_TOLERANCE
+            status = "ok" if got >= floor else "REGRESSED"
+            print(f"  check {label:>22}: committed {want:8.1f}x  "
+                  f"fresh {got:8.1f}x  floor {floor:6.1f}x  [{status}]")
+            if got < floor:
+                failures.append(label)
+    if failures:
+        print(f"--check FAILED: speedup regressed >30% in: "
+              f"{', '.join(failures)}")
+        return 1
+    print("--check passed: no phase regressed >30%")
+    return 0
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the result rows as JSON to PATH")
+    ap.add_argument("--check", action="store_true",
+                    help="rerun optimizer_scale and fail if any phase "
+                         "speedup regressed >30% vs the committed "
+                         "BENCH_tail_optimizer.json")
     args = ap.parse_args(argv)
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
+
+    if args.check:
+        sys.exit(run_check(root))
+
     from benchmarks import (
         nas_scaleup, optimizer_scale, platform_generality, pruning_opt,
         roofline_report, staircase, wave_verification,

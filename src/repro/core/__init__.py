@@ -4,16 +4,18 @@ from repro.core.hardware import (
     HardwareSpec, TPU_V5E, TPU_V4, TPU_V5P, TPU_LITE, get_hardware,
 )
 from repro.core.tail_model import (
-    LayerShape, StairPoint, StairTable, WaveQuantizationModel, GridWaveModel,
-    staircase_edges, ceil_div,
+    LayerShape, StairPoint, StairTable, ModelStairTable,
+    WaveQuantizationModel, GridWaveModel, staircase_edges, ceil_div,
 )
 from repro.core.candidates import (
-    analytic_candidates, profile_candidates, snap_down, snap_up, snap_nearest,
+    analytic_candidates, profile_candidates, model_profile_candidates,
+    snap_down, snap_up, snap_nearest,
 )
 from repro.core.tail_optimizer import (
     TailEffectOptimizer, TunableLayer, OptimizationResult, Move,
-    discretize_pruning_space,
+    discretize_pruning_space, tunable_from_profile,
 )
+from repro.core.table_cache import ProfileTableCache, hardware_fingerprint
 from repro.core.roofline import RooflineReport, build_report
 from repro.core.hlo_analysis import (
     parse_collectives, CollectiveSummary, cost_summary, count_ops,
@@ -22,10 +24,13 @@ from repro.core.hlo_analysis import (
 __all__ = [
     "HardwareSpec", "TPU_V5E", "TPU_V4", "TPU_V5P", "TPU_LITE",
     "get_hardware", "LayerShape", "StairPoint", "StairTable",
-    "WaveQuantizationModel",
+    "ModelStairTable", "WaveQuantizationModel",
     "GridWaveModel", "staircase_edges", "ceil_div", "analytic_candidates",
-    "profile_candidates", "snap_down", "snap_up", "snap_nearest",
+    "profile_candidates", "model_profile_candidates", "snap_down",
+    "snap_up", "snap_nearest",
     "TailEffectOptimizer", "TunableLayer", "OptimizationResult", "Move",
-    "discretize_pruning_space", "RooflineReport", "build_report",
+    "discretize_pruning_space", "tunable_from_profile",
+    "ProfileTableCache", "hardware_fingerprint", "RooflineReport",
+    "build_report",
     "parse_collectives", "CollectiveSummary", "cost_summary", "count_ops",
 ]

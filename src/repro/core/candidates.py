@@ -24,7 +24,9 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.hardware import HardwareSpec
-from repro.core.tail_model import LayerShape, WaveQuantizationModel
+from repro.core.tail_model import (
+    LayerShape, ModelStairTable, WaveQuantizationModel,
+)
 
 
 def analytic_candidates(
@@ -84,6 +86,26 @@ def profile_candidates(
         out.extend(int(w[a + i]) for i in seg)
         prev_best = best
     return np.array(sorted(set(out)), dtype=np.int64)
+
+
+def model_profile_candidates(
+    table: ModelStairTable,
+    top_per_wave: int = 1,
+) -> list[np.ndarray]:
+    """Paper Eq. 4 over a whole model's stacked sweep at once.
+
+    One ``evaluate_model_batch`` table in, one candidate vector per layer
+    out — each row identical to running ``profile_candidates`` on that
+    layer's own sweep.  This is the model-level front half of the paper's
+    pre-analysis: stacked sweep -> per-layer candidate sets -> Algorithm 2.
+    """
+    out = []
+    for i in range(len(table)):
+        t = table.layer_table(i)
+        out.append(profile_candidates(t.widths, t.utilization,
+                                      t.throughput,
+                                      top_per_wave=top_per_wave))
+    return out
 
 
 def snap_down(candidates: np.ndarray, width: int) -> int | None:

@@ -11,6 +11,10 @@ sources (cross-checked against each other in tests):
                        padding comes from the analytic overlay)
   * ``pallas_grid``  — grid-cell counts for a kernel's BlockSpec (the literal
                        ceil(B/S) of paper Eq. 3)
+
+``analytic_profile_stack`` profiles a whole model (all layers x all widths)
+in one stacked sweep; persisting these tables across processes is
+``repro.core.table_cache``'s job.
 """
 
 from __future__ import annotations
@@ -47,20 +51,54 @@ class LayerProfile:
         return "\n".join(rows)
 
 
+def analytic_profile_stack(
+    hw: HardwareSpec,
+    layers: Sequence[LayerShape],
+    widths_per_layer: Sequence[Sequence[int]],
+) -> list[LayerProfile]:
+    """All layers x all widths in ONE stacked model call.
+
+    The model-level counterpart of ``analytic_profile``: a whole model's
+    pre-analysis (the paper's Step 1 over every layer) is a single
+    ``evaluate_model_batch`` sweep instead of one dispatch per layer; each
+    returned profile is bit-for-bit what the per-layer sweep yields.
+    """
+    model = WaveQuantizationModel(hw)
+    stacked = model.evaluate_model_batch(layers, widths_per_layer)
+    out = []
+    for i, layer in enumerate(layers):
+        t = stacked.layer_table(i)
+        out.append(LayerProfile(
+            name=layer.name,
+            widths=t.widths,
+            latency_s=t.latency_s,
+            utilization=t.utilization,
+            throughput=t.throughput,
+            waves=t.waves,
+            source="analytic",
+        ))
+    return out
+
+
 def analytic_profile(hw: HardwareSpec, layer: LayerShape,
                      widths: Sequence[int]) -> LayerProfile:
-    """One vectorized ``evaluate_batch`` sweep — no per-width Python loop."""
-    model = WaveQuantizationModel(hw)
-    t = model.evaluate_batch(layer, widths)
-    return LayerProfile(
-        name=layer.name,
-        widths=t.widths,
-        latency_s=t.latency_s,
-        utilization=t.utilization,
-        throughput=t.throughput,
-        waves=t.waves,
-        source="analytic",
-    )
+    """One-layer wrapper over the stacked engine — no per-width loop."""
+    return analytic_profile_stack(hw, [layer], [widths])[0]
+
+
+# One module-level jit for the profiled matmul: hoisted out of the sweep
+# loop so its trace/lowering caches are shared across every width (a fresh
+# ``jax.jit(lambda ...)`` per width defeats them all) and across repeated
+# ``hlo_profile`` calls in one process.
+_MATMUL_JIT = None
+
+
+def _matmul_jit():
+    global _MATMUL_JIT
+    if _MATMUL_JIT is None:
+        import jax
+        _MATMUL_JIT = jax.jit(lambda a, b: a @ b)
+    return _MATMUL_JIT
 
 
 def hlo_profile(hw: HardwareSpec, layer: LayerShape,
@@ -80,11 +118,12 @@ def hlo_profile(hw: HardwareSpec, layer: LayerShape,
     # Analytic overlay for the whole sweep in one batched call; the per-width
     # loop below only pays for compilation + cost_analysis.
     tbl = model.evaluate_batch(layer, widths)
+    jitted = _matmul_jit()
     lat, util, thr, wav = [], [], [], []
     for i, w in enumerate(widths):
         x = jax.ShapeDtypeStruct((layer.tokens, layer.d_in), jnp.bfloat16)
         wt = jax.ShapeDtypeStruct((layer.d_in, int(w)), jnp.bfloat16)
-        compiled = jax.jit(lambda a, b: a @ b).lower(x, wt).compile()
+        compiled = jitted.lower(x, wt).compile()
         ca = compiled.cost_analysis()
         if isinstance(ca, (list, tuple)):
             ca = ca[0]
@@ -94,6 +133,7 @@ def hlo_profile(hw: HardwareSpec, layer: LayerShape,
         util.append(useful / pt.padded_flops if pt.padded_flops else 0.0)
         thr.append(useful / pt.latency_s if pt.latency_s else 0.0)
         wav.append(pt.waves)
+    assert len(lat) == len(widths), "profile rows must match the sweep"
     return LayerProfile(
         name=layer.name, widths=np.asarray(list(widths)),
         latency_s=np.asarray(lat), utilization=np.asarray(util),

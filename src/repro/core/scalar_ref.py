@@ -14,6 +14,13 @@ preserves that seed implementation unchanged, for two purposes only:
     of the table-driven engine stays measured, not asserted.
 
 Do not "optimize" this file — its value is being the slow, known-good path.
+
+One deliberate deviation from the seed: ``_one_latency_round``'s revert
+used to pop the *last* Move, which could be a balancing up-move rather
+than the down-move being reverted, so ``OptimizationResult.moves`` could
+disagree with ``new_widths``.  Both this reference and the table-driven
+path now delete the down-Move itself (coordinated behavior change; the
+replay-consistency test in tests/test_batched_equivalence.py pins it).
 """
 
 from __future__ import annotations
@@ -177,6 +184,7 @@ class ScalarTailEffectOptimizer:
             down = self._down(tl, widths[j])
             applied_down = False
             old_w = widths[j]
+            down_move_at = len(moves)
             if down is not None and lg[j] > 0:
                 gain = self._latency(tl, widths[j]) - self._latency(tl, down)
                 dp = tl.params(down) - tl.params(widths[j])
@@ -197,9 +205,15 @@ class ScalarTailEffectOptimizer:
                 moves.append(Move(k, "up", widths[k], up, -extra, dp))
                 widths[k] = up
 
+            # Revert removes the down-Move itself (up-moves appended after
+            # it stay applied).  The seed popped the LAST move here, which
+            # could be a balancing up-move, leaving ``moves`` inconsistent
+            # with ``new_widths``; fixed in lockstep with the table-driven
+            # path (the one deliberate deviation from the seed — see the
+            # module docstring).
             if applied_down and not (-tau < pg_total() < tau):
                 widths[j] = old_w
-                moves.pop()
+                del moves[down_move_at]
 
         l_new = self._total_latency(layers, widths)
         return OptimizationResult(

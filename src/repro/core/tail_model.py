@@ -36,6 +36,32 @@ width vector — and is the primitive everything else is built on:
     entirely on table lookups, never calling back into the model inside
     its greedy loops.
 
+Stacked model-level sweeps
+--------------------------
+``evaluate_batch`` is per-layer, so a 1000+-layer config still pays one
+NumPy dispatch (and one Python loop iteration) per layer-shape group.  The
+model-level engine stacks the whole sweep instead: layers are flattened
+into padded ``(n_layers, max_candidates)`` width arrays (``pack_widths``)
+and the per-layer constants — tile-padded token/d_in dims, shard counts,
+dtype, flop multiplier — are broadcast as ``(n_layers, 1)`` columns
+(``_LayerColumns``), so all layers x all candidate widths evaluate in ONE
+stacked NumPy call:
+
+  * ``evaluate_model_batch(layers, widths_per_layer)`` returns a
+    ``ModelStairTable`` — the 2-D counterpart of ``StairTable`` with a
+    per-layer ``counts`` mask; ``layer_table(i)`` slices row ``i`` back to
+    a plain ``StairTable``;
+  * ``latency_model_batch`` is its latency-only fast path (ragged list of
+    row views), the primitive under ``tail_optimizer._build_tables`` and
+    the disk-backed profile-table cache (``repro.core.table_cache``);
+  * both are chunked over row blocks so the ~10 elementwise temporaries
+    stay cache-resident however many layers are stacked.
+
+Every row is bit-for-bit equal to the per-layer ``evaluate_batch`` sweep:
+the float expressions keep the exact scalar operand order, and the
+exact-identity factors the per-layer path skips (shard 1, flop multiplier
+1.0) are IEEE no-ops when multiplied in as columns.
+
 This mirrors the paper's "Step 1: pre-analysis": profile (here: derive) the
 per-layer L/U/T tables once, then optimize over the tables.  The float
 arithmetic is ordered identically to the historical scalar path, so batched
@@ -136,12 +162,94 @@ class StairTable:
         return [self.point(i) for i in range(len(self))]
 
 
+@dataclasses.dataclass(frozen=True)
+class ModelStairTable:
+    """All layers x all candidate widths: one stacked sweep, 2-D arrays.
+
+    Rows are layers, columns are candidates; rows shorter than
+    ``widths.shape[1]`` are padded (pad width 1) and masked by ``counts``.
+    ``layer_table(i)`` slices row ``i`` back to a per-layer ``StairTable``
+    whose arrays are bit-for-bit what ``evaluate_batch`` would return.
+    """
+
+    layer_names: tuple[str, ...]
+    widths: np.ndarray        # (L, C) int64, rows padded with width 1
+    counts: np.ndarray        # (L,) int64: valid candidates per row
+    latency_s: np.ndarray     # (L, C) float64
+    utilization: np.ndarray   # (L, C) float64
+    throughput: np.ndarray    # (L, C) float64
+    waves: np.ndarray         # (L, C) int64
+    flops: np.ndarray         # (L, C) float64
+    padded_flops: np.ndarray  # (L, C) float64
+
+    def __len__(self) -> int:
+        return len(self.layer_names)
+
+    def layer_table(self, i: int) -> StairTable:
+        n = int(self.counts[i])
+        return StairTable(
+            widths=self.widths[i, :n],
+            latency_s=self.latency_s[i, :n],
+            utilization=self.utilization[i, :n],
+            throughput=self.throughput[i, :n],
+            waves=self.waves[i, :n],
+            flops=self.flops[i, :n],
+            padded_flops=self.padded_flops[i, :n],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class _LayerColumns:
+    """Per-layer constants of the staircase math as (L, 1) columns.
+
+    Derived quantities that the scalar path computes from ints
+    (``two_mk = (2.0 * m_pad) * k_pad`` etc.) are hoisted here once per
+    stack in the scalar operand order, so broadcasting them over a width
+    block reproduces the per-layer float sequence exactly.  ``all_*``
+    flags let the stacked core skip whole passes when a factor is the
+    identity for EVERY row (the per-layer path skips them per layer; for
+    mixed stacks the multiply runs everywhere and is an IEEE no-op on the
+    identity rows).
+    """
+
+    shard_out: np.ndarray   # (L, 1) int64
+    shard_in: np.ndarray    # (L, 1) int64
+    fm: np.ndarray          # (L, 1) float64 flop_multiplier
+    bits: np.ndarray        # (L, 1) int64 dtype_bits
+    m_pad: np.ndarray       # (L, 1) int64
+    k_pad: np.ndarray       # (L, 1) int64
+    two_mk: np.ndarray      # (L, 1) float64: (2.0 * m_pad) * k_pad
+    mk: np.ndarray          # (L, 1) int64: m_pad * k_pad
+    k_plus_m: np.ndarray    # (L, 1) int64: k_pad + m_pad
+    two_td: np.ndarray      # (L, 1) float64: (2.0 * tokens) * d_in
+    all_so1: bool           # every shard_out == 1
+    all_si1: bool           # every shard_in == 1
+    all_fm1: bool           # every flop_multiplier == 1.0
+    bytes_aligned: bool     # every dtype_bits % 8 == 0
+
+    def block(self, sl: slice) -> "_LayerColumns":
+        return dataclasses.replace(
+            self, shard_out=self.shard_out[sl], shard_in=self.shard_in[sl],
+            fm=self.fm[sl], bits=self.bits[sl], m_pad=self.m_pad[sl],
+            k_pad=self.k_pad[sl], two_mk=self.two_mk[sl], mk=self.mk[sl],
+            k_plus_m=self.k_plus_m[sl], two_td=self.two_td[sl])
+
+
+# Elements per stacked row-block sweep: with ~10 float64 temporaries this
+# keeps the working set around 2.5 MB (L2/L3-resident); one giant pass over
+# a 1000-layer stack goes memory-bound and costs several times more per
+# point.
+_STACKED_CHUNK = 32768
+
+
 class WaveQuantizationModel:
     """Closed-form staircase model L(width) = dL * ceil(width / Q).
 
     ``evaluate_batch`` is the primitive; ``evaluate``/``staircase`` are thin
-    wrappers over it.  ``eval_points`` counts widths evaluated since
-    construction (benchmark instrumentation for the table-driven refactor).
+    wrappers over it.  ``evaluate_model_batch``/``latency_model_batch``
+    stack many layers into one call (see module docstring).  ``eval_points``
+    counts widths evaluated since construction (benchmark instrumentation
+    for the table-driven refactor).
     """
 
     def __init__(self, hw: HardwareSpec):
@@ -269,6 +377,187 @@ class WaveQuantizationModel:
     def staircase_arrays(self, layer: LayerShape, widths: Sequence[int]):
         t = self.evaluate_batch(layer, widths)
         return t.widths, t.latency_s, t.utilization, t.throughput
+
+    # ---- stacked model-level sweep --------------------------------------
+    @staticmethod
+    def pack_widths(
+        widths_per_layer: Sequence[Sequence[int]],
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Ragged per-layer width vectors -> padded (L, C) int64 + counts.
+
+        Pad value is 1 (any valid width); padded cells compute ordinary
+        staircase values and are masked out by ``counts`` downstream.
+        """
+        vecs = [np.atleast_1d(np.asarray(v, dtype=np.int64))
+                for v in widths_per_layer]
+        counts = np.array([v.size for v in vecs], dtype=np.int64)
+        n_layers = len(vecs)
+        n_cols = int(counts.max()) if n_layers else 0
+        if n_layers and int(counts.min()) == n_cols:
+            return (np.stack(vecs) if n_cols else
+                    np.zeros((n_layers, 0), np.int64)), counts
+        packed = np.ones((n_layers, n_cols), dtype=np.int64)
+        for i, v in enumerate(vecs):
+            packed[i, : v.size] = v
+        return packed, counts
+
+    def _stack_columns(self, layers: Sequence[LayerShape]) -> _LayerColumns:
+        hw = self.hw
+
+        def col(vals, dtype):
+            return np.asarray(vals, dtype=dtype)[:, None]
+
+        tokens = col([l.tokens for l in layers], np.int64)
+        d_in = col([l.d_in for l in layers], np.int64)
+        shard_in = col([l.shard_in for l in layers], np.int64)
+        shard_out = col([l.shard_out for l in layers], np.int64)
+        bits = col([l.dtype_bits for l in layers], np.int64)
+        fm = col([l.flop_multiplier for l in layers], np.float64)
+        sub = np.where(bits >= 32, hw.sublane_fp32, hw.sublane_bf16)
+        m_pad = -(-tokens // sub) * sub
+        k_pad = -(-(-(-d_in // shard_in)) // hw.lane) * hw.lane
+        return _LayerColumns(
+            shard_out=shard_out, shard_in=shard_in, fm=fm, bits=bits,
+            m_pad=m_pad, k_pad=k_pad,
+            two_mk=(2.0 * m_pad) * k_pad,
+            mk=m_pad * k_pad,
+            k_plus_m=k_pad + m_pad,
+            two_td=(2.0 * tokens) * d_in,
+            all_so1=bool((shard_out == 1).all()) if len(layers) else True,
+            all_si1=bool((shard_in == 1).all()) if len(layers) else True,
+            all_fm1=bool((fm == 1.0).all()) if len(layers) else True,
+            bytes_aligned=bool((bits % 8 == 0).all()) if len(layers) else True,
+        )
+
+    def _staircase_core_stacked(self, cols: _LayerColumns, w: np.ndarray):
+        """Stacked counterpart of ``_staircase_core`` over a (rows, C) width
+        block with (rows, 1) layer-constant columns.
+
+        Same float operand order as the scalar path; identity factors the
+        per-layer path skips are multiplied in uniformly (IEEE no-ops on
+        the identity rows), so every element is bit-for-bit equal to the
+        per-layer sweep of its row.
+        """
+        hw = self.hw
+        nonneg = w.size == 0 or int(w.min()) >= 1
+        per_dev = w if cols.all_so1 else -(-w // cols.shard_out)
+        n_waves = _ceil_div_arr(per_dev, hw.lane, nonneg)
+        n_pad = n_waves * hw.lane
+
+        padded_per_dev = cols.two_mk * n_pad
+        if not cols.all_fm1:
+            padded_per_dev = padded_per_dev * cols.fm
+
+        compute_s = padded_per_dev / hw.peak_flops_bf16
+        elems = cols.mk + cols.k_plus_m * n_pad
+        if cols.bytes_aligned:
+            bytes_per_dev = elems * (cols.bits // 8)
+        else:
+            bytes_per_dev = elems * cols.bits // 8
+        memory_s = bytes_per_dev / hw.hbm_bandwidth
+        latency = np.maximum(compute_s, memory_s)
+        return latency, n_waves, padded_per_dev, nonneg
+
+    def latency_model_packed(
+        self,
+        layers: Sequence[LayerShape],
+        w2d: np.ndarray,
+        counts: np.ndarray,
+    ) -> np.ndarray:
+        """(L, C) latency matrix for a pre-packed width matrix (rows padded
+        with any valid width past ``counts[i]``; pad cells compute ordinary
+        staircase values the caller masks out).  The packed core under
+        ``latency_model_batch``, exposed so hot callers (the optimizer's
+        table build) can fill one matrix instead of L small arrays."""
+        if len(layers) != w2d.shape[0]:
+            raise ValueError("one width row per layer required")
+        self.eval_calls += 1
+        self.eval_points += int(np.asarray(counts).sum())
+        n_layers, n_cols = w2d.shape
+        cols = self._stack_columns(layers)
+        lat = np.empty((n_layers, n_cols), dtype=np.float64)
+        rows = max(1, _STACKED_CHUNK // max(1, n_cols))
+        for r0 in range(0, n_layers, rows):
+            sl = slice(r0, r0 + rows)
+            lat[sl] = self._staircase_core_stacked(cols.block(sl), w2d[sl])[0]
+        return lat
+
+    def latency_model_batch(
+        self,
+        layers: Sequence[LayerShape],
+        widths_per_layer: Sequence[Sequence[int]],
+    ) -> list[np.ndarray]:
+        """The latency columns of ``evaluate_model_batch`` alone — one
+        stacked sweep over all layers, returned as a ragged list of row
+        views (bit-identical to per-layer ``latency_batch`` calls).  This
+        is the optimizer's model-level table-build fast path."""
+        if len(layers) != len(widths_per_layer):
+            raise ValueError("one width vector per layer required")
+        w2d, counts = self.pack_widths(widths_per_layer)
+        lat = self.latency_model_packed(layers, w2d, counts)
+        return [lat[i, : int(counts[i])] for i in range(len(layers))]
+
+    def evaluate_model_batch(
+        self,
+        layers: Sequence[LayerShape],
+        widths_per_layer: Sequence[Sequence[int]],
+    ) -> ModelStairTable:
+        """Stacked staircase: one ``ModelStairTable`` over all layers x all
+        candidate widths.  ``layer_table(i)`` is bit-for-bit what
+        ``evaluate_batch(layers[i], widths_per_layer[i])`` returns;
+        ``layers[i].width`` is ignored (the sweep variable is the width
+        vector)."""
+        if len(layers) != len(widths_per_layer):
+            raise ValueError("one width vector per layer required")
+        w2d, counts = self.pack_widths(widths_per_layer)
+        self.eval_calls += 1
+        self.eval_points += int(counts.sum())
+        n_layers, n_cols = w2d.shape
+        cols = self._stack_columns(layers)
+        shape = (n_layers, n_cols)
+        lat = np.empty(shape, dtype=np.float64)
+        util = np.empty(shape, dtype=np.float64)
+        thr = np.empty(shape, dtype=np.float64)
+        waves = np.empty(shape, dtype=np.int64)
+        flops = np.empty(shape, dtype=np.float64)
+        padded = np.empty(shape, dtype=np.float64)
+        rows = max(1, _STACKED_CHUNK // max(1, n_cols))
+        for r0 in range(0, n_layers, rows):
+            sl = slice(r0, r0 + rows)
+            blk = cols.block(sl)
+            w = w2d[sl]
+            latency, n_waves, padded_per_dev, nonneg = \
+                self._staircase_core_stacked(blk, w)
+
+            useful = blk.two_td * w
+            if not cols.all_fm1:
+                useful = useful * blk.fm
+            padded_total = padded_per_dev
+            if not cols.all_si1:
+                padded_total = padded_total * blk.shard_in
+            if not cols.all_so1:
+                padded_total = padded_total * blk.shard_out
+
+            if nonneg:
+                util[sl] = useful / padded_total
+                thr[sl] = useful / latency
+            else:
+                util[sl] = np.divide(useful, padded_total,
+                                     out=np.zeros_like(useful),
+                                     where=padded_total != 0.0)
+                thr[sl] = np.divide(useful, latency,
+                                    out=np.zeros_like(useful),
+                                    where=latency != 0.0)
+            lat[sl] = latency
+            waves[sl] = n_waves
+            flops[sl] = useful
+            padded[sl] = padded_total
+        return ModelStairTable(
+            layer_names=tuple(l.name for l in layers),
+            widths=w2d, counts=counts,
+            latency_s=lat, utilization=util, throughput=thr,
+            waves=waves, flops=flops, padded_flops=padded,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,23 +44,48 @@ greedy loops are pure table lookups:
     fail the budget filter — the budget only shrinks, so they can never
     become valid again.)
 
+Model-level stacked sweeps and the profile-table cache
+------------------------------------------------------
+``_build_tables`` resolves each layer's latency vector from three sources,
+cheapest first:
+
+  1. a **measured profile** attached to the ``TunableLayer`` (``measured``;
+     see ``tunable_from_profile``) — the optimizer only reads latency and
+     params arrays, so Algorithm 2 runs unmodified over profiled hardware
+     tables (the paper's original nvprof flow);
+  2. the **disk cache** (``repro.core.table_cache.ProfileTableCache``,
+     passed to the constructor): repeated ``optimize_*`` calls across
+     processes skip the pre-analysis entirely (a fully warm cache makes
+     zero model sweeps);
+  3. one **stacked model sweep** for every remaining layer at once
+     (``WaveQuantizationModel.latency_model_batch``): all layers x all
+     sweep widths in a single chunked NumPy call instead of one dispatch
+     per layer-shape group.  ``stacked=False`` keeps the historical
+     per-group loop (bit-identical output) as the parity/benchmark
+     baseline.
+
 The seed scalar implementation is frozen in ``repro.core.scalar_ref`` and
 ``tests/test_batched_equivalence.py`` asserts both paths return identical
 widths and moves; ``benchmarks/optimizer_scale.py`` measures the speedup
 (tens of times faster on optimize_latency, hundreds on optimize_accuracy,
-for a 64-layer x 1024-candidate scenario).
+for a 64-layer x 1024-candidate scenario, plus the stacked table-build and
+cold/warm cache phases on a 1024-layer scenario).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
 from repro.core import candidates as cand
 from repro.core.tail_model import LayerShape, WaveQuantizationModel, ceil_div
+
+if TYPE_CHECKING:  # import cycle: profiler imports tail_model
+    from repro.core.profiler import LayerProfile
+    from repro.core.table_cache import ProfileTableCache
 
 # Max widths per evaluate_batch sweep: keeps the ~15 elementwise passes of
 # the staircase math inside L2 (4096 widths x 8 B x a few temporaries);
@@ -75,6 +100,13 @@ class TunableLayer:
     ``candidates`` is normalized to a sorted-unique int64 array at
     construction (snaps are set-based, so this is behavior-preserving);
     the optimizer's binary searches rely on it.
+
+    ``measured`` optionally attaches a profiled (width, latency) table —
+    any object with ``widths`` and ``latency_s`` parallel arrays, e.g.
+    ``profiler.LayerProfile``.  When set, ``_build_tables`` reads every
+    latency it needs from the table instead of sweeping the analytic
+    model, so Algorithm 2 optimizes over measured hardware data; the
+    table must cover every candidate width plus the starting width.
     """
 
     layer: LayerShape
@@ -84,6 +116,7 @@ class TunableLayer:
     params_per_unit: float
     min_width: int = 1
     max_width: int | None = None
+    measured: "LayerProfile | None" = None
 
     def __post_init__(self):
         c = np.asarray(self.candidates, dtype=np.int64)
@@ -93,6 +126,53 @@ class TunableLayer:
 
     def params(self, width: int) -> float:
         return self.params_per_unit * width
+
+
+def tunable_from_profile(
+    layer: LayerShape,
+    profile: "LayerProfile",
+    params_per_unit: float,
+    *,
+    min_width: int = 1,
+    max_width: int | None = None,
+    top_per_wave: int = 1,
+) -> TunableLayer:
+    """Build a TunableLayer entirely from a measured profile table.
+
+    Candidates come from paper Eq. 4 (argmax U x T per stair) on the
+    profiled utilization/throughput columns, and ``measured`` wires the
+    profiled latencies into ``_build_tables`` — so the optimizer runs on
+    hardware we have no closed form for (the paper's nvprof flow).
+    ``layer.width`` (the starting width) must appear in the profile.
+    """
+    cands = cand.profile_candidates(
+        profile.widths, profile.utilization, profile.throughput,
+        top_per_wave=top_per_wave)
+    return TunableLayer(layer=layer, candidates=cands,
+                        params_per_unit=params_per_unit,
+                        min_width=min_width, max_width=max_width,
+                        measured=profile)
+
+
+def _measured_latencies(tl: TunableLayer, widths: np.ndarray) -> np.ndarray:
+    """Latencies for ``widths`` read out of ``tl.measured``; raises when
+    the profile does not cover a requested width."""
+    prof = tl.measured
+    pw = np.asarray(prof.widths, dtype=np.int64)
+    order = np.argsort(pw, kind="stable")
+    sorted_w = pw[order]
+    idx = np.searchsorted(sorted_w, widths)
+    clipped = np.minimum(idx, sorted_w.size - 1) if sorted_w.size else idx
+    ok = sorted_w.size > 0 and bool(
+        ((idx < sorted_w.size) & (sorted_w[clipped] == widths)).all())
+    if not ok:
+        have = set(int(x) for x in sorted_w)
+        missing = sorted(int(x) for x in widths if int(x) not in have)
+        raise ValueError(
+            f"measured profile for layer {tl.layer.name!r} is missing "
+            f"widths {missing}; profile covers {sorted_w.size} widths")
+    lat = np.asarray(prof.latency_s, dtype=np.float64)[order]
+    return lat[idx]
 
 
 @dataclasses.dataclass
@@ -144,13 +224,15 @@ class OptimizationResult:
         return "\n".join(lines)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _LayerTable:
     """Precomputed candidate table for one tunable layer (Step 1 output).
 
     Candidates are sorted and de-duplicated, so Eq. 8a/8b snaps from a
     candidate are just index ±1; the only binary searches happen once at
     build time (the starting width and the min/max-width fences).
+    ``slots=True``: one instance per layer per build, so construction cost
+    shows up directly in the stacked table-build wall time.
     """
 
     tl: TunableLayer
@@ -221,28 +303,279 @@ class _LayerState:
 
 
 class TailEffectOptimizer:
-    """Paper Algorithm 2 over precomputed per-layer candidate tables."""
+    """Paper Algorithm 2 over precomputed per-layer candidate tables.
 
-    def __init__(self, model: WaveQuantizationModel):
+    ``cache`` (a ``table_cache.ProfileTableCache``) persists the swept
+    tables on disk keyed on (hardware, shape-minus-width, width vector):
+    a warm cache makes ``_build_tables`` skip the model entirely.
+    """
+
+    def __init__(self, model: WaveQuantizationModel,
+                 cache: "ProfileTableCache | None" = None,
+                 bundle_min_layers: int = 64):
         self.model = model
+        self.cache = cache
+        # Stacks at least this deep are cached as ONE whole-stack bundle
+        # file instead of per-layer entries: above ~64 layers the per-file
+        # open cost of fine-grained entries exceeds resweeping the model.
+        self.bundle_min_layers = bundle_min_layers
 
     # ---- Step 1: pre-analysis -------------------------------------------
     def _build_tables(self, layers: Sequence[TunableLayer],
-                      full: bool = True) -> list[_LayerTable]:
-        """Batched sweeps: candidates + the starting width, per layer.
+                      full: bool = True,
+                      stacked: bool = True) -> list[_LayerTable]:
+        """Per-layer candidate tables from measured / cached / swept data.
 
-        The staircase math is elementwise in width, so layers that share
-        every ``LayerShape`` field except width (a transformer stack, say)
-        are swept in ONE ``latency_batch`` call over their concatenated
-        width vectors — bit-identical rows, one NumPy dispatch.
+        Each layer needs latencies for one sweep vector: its candidates
+        plus the starting width (``full=True``), or just the reachable
+        one-step probes plus the start (``full=False``, latency mode —
+        Algorithm 2's latency rounds move a layer at most one candidate
+        from its start, so anything further is never read; accuracy mode
+        needs the whole table for its wave-jump walk).
 
-        ``full=False`` (latency mode) sweeps only each layer's reachable
-        one-step probes instead of its whole candidate table — Algorithm 2's
-        latency rounds move a layer at most one candidate from its start
-        (one Eq. 8a down-step or one Eq. 8b up-step), so anything further
-        is never read.  Accuracy mode needs ``full=True`` for its wave-jump
-        walk (pass 2).
+        The vector is resolved from the first source that has it:
+
+          1. ``tl.measured`` — a profiled (width, latency) table;
+          2. the disk cache (when this optimizer holds one): per-layer
+             entries for shallow models, ONE whole-stack bundle entry for
+             stacks of at least ``bundle_min_layers`` (per-layer file
+             opens dominate at 1000+ layers);
+          3. one stacked ``latency_model_packed`` sweep over every
+             unresolved layer at once — all layers x all sweep widths in
+             a single chunked NumPy call, then written back to the cache.
+
+        ``stacked=False`` replays the historical per-shape-group engine
+        verbatim (one ``latency_batch`` dispatch per group, per-layer
+        Python array building — bit-identical output) as the parity-test /
+        benchmark baseline; it ignores the cache and measured profiles.
         """
+        if not stacked:
+            return self._build_tables_grouped(layers, full)
+        n_layers = len(layers)
+        starts = np.fromiter((tl.layer.width for tl in layers),
+                             np.int64, n_layers)
+        # Cursor/fence arrays over all layers.  Layers handed the SAME
+        # candidates array object (a transformer stack / NAS supernet
+        # sharing one grid) are prepped in one vectorized pass per shared
+        # grid — the binary searches and fence math run over the whole
+        # stack at once; unshared layers fall back to the scalar path.
+        sd_a = np.empty(n_layers, np.int64)
+        su_a = np.empty(n_layers, np.int64)
+        lo_a = np.empty(n_layers, np.int64)
+        hi_a = np.empty(n_layers, np.int64)
+        if full:
+            # The sweep widths for ALL layers, packed into one (L, kmax)
+            # matrix up front (pad width 1, masked by ``counts``): filling
+            # rows is a memcpy per layer (one broadcast per shared grid),
+            # where building L small arrays and re-packing them dominated
+            # the whole table build.
+            kmax = 1 + max((int(tl.candidates.size) for tl in layers),
+                           default=0)
+            w2d = np.ones((n_layers, kmax), dtype=np.int64)
+            counts = np.empty(n_layers, dtype=np.int64)
+        else:
+            # Latency mode: every row is the fixed 3-slot layout
+            # [down-probe, up-probe, start]; unreachable probe slots hold
+            # pad width 1 and are never read back.
+            w2d = np.ones((n_layers, 3), dtype=np.int64)
+            w2d[:, 2] = starts
+            counts = np.full(n_layers, 3, dtype=np.int64)
+
+        grids: dict[int, list[int]] = {}
+        for pos, tl in enumerate(layers):
+            grids.setdefault(id(tl.candidates), []).append(pos)
+        for idxs in grids.values():
+            cands = layers[idxs[0]].candidates  # sorted unique (init)
+            n = int(cands.size)
+            if n == 0:
+                for pos in idxs:
+                    sd_a[pos], su_a[pos] = -1, 0
+                    lo_a[pos], hi_a[pos] = 0, -1
+                    if full:
+                        w2d[pos, 0] = starts[pos]
+                        counts[pos] = 1
+                continue
+            if len(idxs) < 4:
+                # scalar path: vectorized overhead loses on tiny groups
+                for pos in idxs:
+                    tl = layers[pos]
+                    start_w = int(starts[pos])
+                    i = int(cands.searchsorted(start_w, side="left"))
+                    sd = i - 1
+                    su = i + 1 if (i < n and int(cands[i]) == start_w) \
+                        else i
+                    lo = (0 if tl.min_width <= int(cands[0]) else
+                          int(cands.searchsorted(tl.min_width,
+                                                 side="left")))
+                    hi = (n - 1 if (tl.max_width is None
+                                    or tl.max_width >= int(cands[-1])) else
+                          int(cands.searchsorted(tl.max_width,
+                                                 side="right")) - 1)
+                    sd_a[pos], su_a[pos] = sd, su
+                    lo_a[pos], hi_a[pos] = lo, hi
+                    if full:
+                        w2d[pos, :n] = cands
+                        w2d[pos, n] = start_w
+                        counts[pos] = n + 1
+                    else:
+                        if sd >= lo:
+                            w2d[pos, 0] = cands[sd]
+                        if su <= hi:
+                            w2d[pos, 1] = cands[su]
+                continue
+            pos = np.asarray(idxs)
+            st = starts[pos]
+            i = cands.searchsorted(st, side="left")
+            sd = i - 1
+            hit = (i < n) & (cands[np.minimum(i, n - 1)] == st)
+            su = np.where(hit, i + 1, i)
+            min_ws = np.fromiter((layers[j].min_width for j in idxs),
+                                 np.int64, len(idxs))
+            lo = np.where(min_ws <= int(cands[0]), 0,
+                          cands.searchsorted(min_ws, side="left"))
+            max_list = [layers[j].max_width for j in idxs]
+            if all(m is None for m in max_list):
+                hi = np.full(len(idxs), n - 1, dtype=np.int64)
+            else:
+                top = int(cands[-1])
+                mw = np.fromiter((top if m is None else m
+                                  for m in max_list), np.int64, len(idxs))
+                hi = np.where(mw >= top, n - 1,
+                              cands.searchsorted(mw, side="right") - 1)
+            sd_a[pos], su_a[pos] = sd, su
+            lo_a[pos], hi_a[pos] = lo, hi
+            if full:
+                w2d[pos, :n] = cands  # one broadcast per shared grid
+                w2d[pos, n] = st
+                counts[pos] = n + 1
+            else:
+                d_ok = sd >= lo
+                u_ok = su <= hi
+                w2d[pos, 0] = np.where(d_ok, cands[np.maximum(sd, 0)], 1)
+                w2d[pos, 1] = np.where(u_ok, cands[np.minimum(su, n - 1)],
+                                       1)
+
+        down_ok_l = (sd_a >= lo_a).tolist()
+        up_ok_l = (su_a <= hi_a).tolist()
+        sd_l, su_l = sd_a.tolist(), su_a.tolist()
+        lo_l, hi_l = lo_a.tolist(), hi_a.tolist()
+        starts_l = starts.tolist()
+
+        # Resolve each layer's sweep-vector latencies, cheapest source
+        # first: measured profile -> disk cache -> stacked model sweep.
+        # ``lat_vecs[i]`` may be a full padded row (swept) or an exact
+        # ``counts[i]``-length vector (measured/cached); only indices
+        # below ``counts[i]`` (and, in latency mode, only the reachable
+        # probe slots) are read.
+        lat_vecs: list = [None] * n_layers
+        any_measured = False
+        for i, tl in enumerate(layers):
+            if tl.measured is not None:
+                any_measured = True
+                if full:
+                    lat_vecs[i] = _measured_latencies(tl,
+                                                      w2d[i, :counts[i]])
+                else:
+                    # look up only the real slots — pad slots (width 1)
+                    # need not exist in the profile and are never read
+                    mask = np.array([down_ok_l[i], up_ok_l[i], True])
+                    vec = np.zeros(3, dtype=np.float64)
+                    vec[mask] = _measured_latencies(tl, w2d[i, mask])
+                    lat_vecs[i] = vec
+        lat2d_all = None   # the full (L, C) sweep matrix, when one exists
+        if self.cache is not None and not any_measured \
+                and n_layers >= self.bundle_min_layers:
+            # Deep stack: one whole-stack bundle file (per-layer entries
+            # would cost one file open each — slower than resweeping).
+            hw = self.model.hw
+            shapes = [tl.layer for tl in layers]
+            lat2d = self.cache.get_stack(hw, shapes, w2d, counts)
+            if lat2d is None:
+                lat2d = self.model.latency_model_packed(shapes, w2d,
+                                                        counts)
+                self.cache.put_stack(hw, shapes, w2d, counts, lat2d)
+            lat_vecs = list(lat2d)
+            lat2d_all = lat2d
+        else:
+            if self.cache is not None:
+                hw = self.model.hw
+                for i, tl in enumerate(layers):
+                    if lat_vecs[i] is None:
+                        hit = self.cache.get(hw, tl.layer,
+                                             w2d[i, :counts[i]])
+                        if hit is not None and "latency_s" in hit:
+                            lat_vecs[i] = hit["latency_s"]
+            miss = [i for i, v in enumerate(lat_vecs) if v is None]
+            if miss:
+                if len(miss) == n_layers:
+                    lat2d = self.model.latency_model_packed(
+                        [tl.layer for tl in layers], w2d, counts)
+                    lat_vecs = list(lat2d)
+                    lat2d_all = lat2d
+                else:
+                    rows = np.asarray(miss)
+                    lat2d = self.model.latency_model_packed(
+                        [layers[i].layer for i in miss],
+                        w2d[rows], counts[rows])
+                    for r, i in enumerate(miss):
+                        lat_vecs[i] = lat2d[r]
+                if self.cache is not None:
+                    hw = self.model.hw
+                    for i in miss:
+                        k = int(counts[i])
+                        self.cache.put(hw, layers[i].layer, w2d[i, :k],
+                                       {"latency_s": lat_vecs[i][:k]})
+
+        tables = []
+        counts_l = counts.tolist()
+        # start_par is params_per_unit * width per layer: one vectorized
+        # multiply (elementwise float64 mul == the scalar `params` mul
+        # bit-for-bit), not 1000 method calls.
+        ppu = np.fromiter((tl.params_per_unit for tl in layers),
+                          np.float64, n_layers)
+        start_par_l = (ppu * starts).tolist()
+        # Latency-mode rows convert to Python floats in ONE bulk tolist
+        # when they all come from the stacked sweep matrix.
+        rows_l = lat2d_all.tolist() if (not full and
+                                        lat2d_all is not None) else None
+        for pos, tl in enumerate(layers):
+            vec = lat_vecs[pos]
+            sd, su = sd_l[pos], su_l[pos]
+            start_w = starts_l[pos]
+            if full:
+                k = counts_l[pos]
+                lat = vec[: k - 1]
+                start_lat = float(vec[k - 1])
+            else:
+                row = rows_l[pos] if rows_l is not None else \
+                    vec[:3].tolist()
+                lat = {}
+                if down_ok_l[pos]:
+                    lat[sd] = row[0]
+                if up_ok_l[pos]:
+                    lat[su] = row[1]
+                start_lat = row[2]
+            tables.append(_LayerTable(
+                tl=tl, pos=pos, name=tl.layer.name,
+                cands=tl.candidates,
+                lat=lat,
+                lo=lo_l[pos], hi=hi_l[pos],
+                start_width=start_w,
+                start_lat=start_lat,
+                start_par=start_par_l[pos],
+                start_down=sd,
+                start_up=su,
+            ))
+        return tables
+
+    def _build_tables_grouped(self, layers: Sequence[TunableLayer],
+                              full: bool = True) -> list[_LayerTable]:
+        """The historical per-shape-group table build (the engine this
+        repo shipped before the stacked sweep), kept verbatim as the
+        parity-test and benchmark baseline: layers sharing every
+        ``LayerShape`` field but width are swept in one chunked
+        ``latency_batch`` dispatch per group, with per-layer Python array
+        building.  Output is bit-identical to the stacked path."""
         prepped = []
         groups: dict[tuple, list[int]] = {}
         for pos, tl in enumerate(layers):
@@ -252,8 +585,6 @@ class TailEffectOptimizer:
             if n == 0:
                 sd, su, lo, hi = -1, 0, 0, -1
             else:
-                # one binary search for the start cursor; the min/max
-                # fences only need a search when they cut into the table
                 i = int(cands.searchsorted(start_w, side="left"))
                 sd = i - 1
                 su = i + 1 if (i < n and int(cands[i]) == start_w) else i
@@ -280,25 +611,17 @@ class TailEffectOptimizer:
                     arrs + [np.array([prepped[i][2] for i in idxs],
                                      dtype=np.int64)])
             else:
-                # latency mode: Alg. 2 only ever probes one step down
-                # (Eq. 8a) and one step up (Eq. 8b) from the start — sweep
-                # exactly the reachable probes, not the whole table.
                 probe_idx = []
                 wl = []
                 for i in idxs:
                     _, cands, start_w, sd, su, lo, hi = prepped[i]
-                    # mirror down_from/up_from reachability exactly: the
-                    # down-step only honours the min fence, the up-step
-                    # only the max fence
                     probes = ([sd] if sd >= lo else []) \
                         + ([su] if su <= hi else [])
                     probe_idx.append(probes)
                     wl.extend(int(cands[j]) for j in probes)
                     wl.append(start_w)
                 widths = np.asarray(wl, dtype=np.int64)
-            # Chunked so each sweep's working set stays cache-resident —
-            # one giant elementwise pass goes memory-bound and costs
-            # several times more per point.
+            # Chunked so each sweep's working set stays cache-resident.
             lat_all = np.concatenate([
                 self.model.latency_batch(ref_layer,
                                          widths[o:o + _SWEEP_CHUNK])
@@ -429,6 +752,7 @@ class TailEffectOptimizer:
             di = sj.down()
             applied_down = False
             dp_down = 0.0
+            down_move_at = len(moves)
             if di is not None and lg[j] > 0:
                 gain = sj.lat - float(tj.lat[di])
                 dp_down = tj.par_at(di) - sj.par
@@ -459,17 +783,16 @@ class TailEffectOptimizer:
                 pg += dp
 
             # Eq. 7 is a hard constraint: if no up-candidates remain to
-            # balance this scale-down, revert it.  Seed-faithful quirk: if
-            # the balance loop applied up-moves after this down-move, the
-            # unconditional pop() drops the LAST (up) Move record rather
-            # than the down-Move, so ``moves`` can disagree with
-            # ``new_widths``.  Kept verbatim because this PR's contract is
-            # exact parity with the frozen scalar path (see ROADMAP open
-            # items for the coordinated fix).
+            # balance this scale-down, revert it — removing the down-Move
+            # itself, not whatever Move happens to be last (the balance
+            # loop may have appended up-moves after it that stay applied).
+            # The seed popped the last entry, so ``moves`` could disagree
+            # with ``new_widths`` in this corner; fixed in lockstep with
+            # ``scalar_ref`` (coordinated behavior-change, see ROADMAP).
             if applied_down and not (-tau < pg < tau):
                 sj.reset()
                 pg -= dp_down
-                moves.pop()
+                del moves[down_move_at]
 
         l_new = sum(s.lat for s in states)
         widths = {s.table.name: s.width for s in states}

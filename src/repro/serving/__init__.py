@@ -1,3 +1,7 @@
-from repro.serving.engine import Request, Result, ServeEngine
+from repro.serving.engine import (
+    Request, Result, ServeEngine, ServingWidthPlanner, TrafficClass,
+    WidthPlan,
+)
 
-__all__ = ["Request", "Result", "ServeEngine"]
+__all__ = ["Request", "Result", "ServeEngine", "ServingWidthPlanner",
+           "TrafficClass", "WidthPlan"]

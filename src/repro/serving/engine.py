@@ -4,12 +4,25 @@ sampling, continuous slot management and per-request stop handling.
 The decode step is the exact function the dry-run lowers for the
 ``decode_32k`` / ``long_500k`` cells; on the production mesh the KV cache is
 sequence-sharded over the model axis (flash-decode).
+
+Width planning
+--------------
+``ServingWidthPlanner`` runs the paper's Algorithm 2 per *traffic class*
+(token-volume bucket): the tail-free width config that is optimal for a
+32-token decode batch is not optimal for an 8k-token prefill batch (the
+staircase quantum is the same but the compute/memory crossover moves), so
+the planner pre-computes one width plan per class on the stacked table
+engine — all layers x all candidates in one NumPy sweep, with tables
+persisted through ``repro.core.table_cache`` so a planner restart skips the
+pre-analysis.  ``ServeEngine`` consults the planner at request-batch
+boundaries (``plan_log``), the swap points where a width config change is
+representable without touching in-flight state.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,17 +46,117 @@ class Result:
     steps: int
 
 
+@dataclasses.dataclass(frozen=True)
+class TrafficClass:
+    """One serving traffic bucket: a typical per-device token volume
+    (batch x padded sequence) and a latency-reduction target."""
+
+    name: str
+    tokens: int
+    delta: float = 0.95       # Algorithm 2 target: L_new <= delta * L_old
+
+
+@dataclasses.dataclass
+class WidthPlan:
+    """Per-traffic-class output of Algorithm 2: the width config to swap
+    in at a batch boundary, plus its modeled latency."""
+
+    traffic: TrafficClass
+    widths: dict[str, int]
+    latency_s: float
+    baseline_latency_s: float
+    satisfied: bool
+
+    @property
+    def latency_reduction(self) -> float:
+        if self.baseline_latency_s == 0:
+            return 0.0
+        return 1.0 - self.latency_s / self.baseline_latency_s
+
+
+class ServingWidthPlanner:
+    """Plans tail-free width configs per traffic class on the stacked
+    table engine (paper Algorithm 2, latency-oriented).
+
+    ``layers`` are ``TunableLayer`` templates at a reference token count;
+    each traffic class re-tokens the shapes and runs one optimize pass.
+    All per-class table builds go through the same
+    ``TailEffectOptimizer`` — one stacked sweep per class — and, when a
+    ``table_cache.ProfileTableCache`` is supplied, tables persist across
+    planner restarts (a warm planner performs zero model sweeps).
+    """
+
+    def __init__(self, hw, layers: Sequence, *, cache=None,
+                 tau_frac: float = 0.02):
+        from repro.core.tail_model import WaveQuantizationModel
+        from repro.core.tail_optimizer import TailEffectOptimizer
+
+        self.hw = hw
+        self.layers = list(layers)
+        self.model = WaveQuantizationModel(hw)
+        self.opt = TailEffectOptimizer(self.model, cache=cache)
+        self.tau_frac = tau_frac
+        self.plans: dict[str, WidthPlan] = {}
+
+    def _retokened(self, tokens: int) -> list:
+        out = []
+        for tl in self.layers:
+            if tl.layer.tokens == tokens:
+                out.append(tl)
+                continue
+            layer = dataclasses.replace(tl.layer, tokens=tokens)
+            # A measured profile is only valid at the token count it was
+            # profiled with — re-tokened classes must fall back to the
+            # analytic model rather than silently reuse stale latencies.
+            out.append(dataclasses.replace(tl, layer=layer, measured=None))
+        return out
+
+    def plan(self, traffic: Sequence[TrafficClass]) -> dict[str, WidthPlan]:
+        """One Algorithm 2 pass per traffic class; results are kept on the
+        planner for ``select`` and returned keyed by class name."""
+        total_p = sum(tl.params(tl.layer.width) for tl in self.layers)
+        for tc in traffic:
+            res = self.opt.optimize_latency(
+                self._retokened(tc.tokens),
+                tau=self.tau_frac * total_p,
+                delta=tc.delta)
+            self.plans[tc.name] = WidthPlan(
+                traffic=tc,
+                widths=res.new_widths,
+                latency_s=res.latency_new_s,
+                baseline_latency_s=res.latency_old_s,
+                satisfied=res.satisfied)
+        return self.plans
+
+    def select(self, tokens: int) -> WidthPlan:
+        """The planned class nearest (log-scale) to a batch's token
+        volume — the boundary-time lookup ``ServeEngine`` performs."""
+        if not self.plans:
+            raise ValueError("no plans yet: call plan() first")
+        best = min(
+            self.plans.values(),
+            key=lambda p: abs(np.log(max(tokens, 1))
+                              - np.log(max(p.traffic.tokens, 1))))
+        return best
+
+
 class ServeEngine:
     """Static-batch engine: pads requests to a slot batch, prefills, then
     decodes all slots in lockstep, releasing finished ones."""
 
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512,
-                 batch_slots: int = 4, rng_seed: int = 0):
+                 batch_slots: int = 4, rng_seed: int = 0,
+                 planner: "ServingWidthPlanner | None" = None):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.slots = batch_slots
         self.rng = jax.random.PRNGKey(rng_seed)
+        # Width planning: at each batch boundary the engine looks up the
+        # traffic class nearest the batch's token volume and records the
+        # chosen plan (the representable swap point for a width change).
+        self.planner = planner
+        self.plan_log: List[WidthPlan] = []
 
         self._decode = jax.jit(
             lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
@@ -61,6 +174,8 @@ class ServeEngine:
         cfg = self.cfg
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
+        if self.planner is not None:
+            self.plan_log.append(self.planner.select(b * plen))
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad

@@ -3,8 +3,17 @@ refactor of the seed scalar path (frozen in repro.core.scalar_ref).
 
  * ``evaluate_batch`` rows must equal per-width scalar evaluation
    bit-for-bit — same float op order, so not approx: ``==``.
+ * The stacked model-level sweep (``evaluate_model_batch`` /
+   ``latency_model_batch``) must equal per-layer ``evaluate_batch`` — and
+   hence the scalar path — bit-for-bit, row by row.
  * The table-driven Algorithm 2 must return identical widths and moves to
-   the seed implementation on the same scenarios.
+   the seed implementation on the same scenarios, and the stacked table
+   build must equal the historical per-group build.
+
+One deliberate deviation from the seed is pinned here instead: the
+latency-round revert now removes the down-Move itself (not whatever Move
+is last), so ``OptimizationResult.moves`` always replays to
+``new_widths`` — on both the scalar and table-driven paths.
 """
 
 import numpy as np
@@ -104,6 +113,56 @@ class TestEvaluateBatchEquivalence:
             assert scalar_evaluate(TPU_LITE, layer.with_width(int(w))) \
                 == table.point(i)
 
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_stacked_model_batch_bit_for_bit(self, seed):
+        """Every ``ModelStairTable`` row equals the per-layer
+        ``evaluate_batch`` sweep (and therefore the scalar path) exactly,
+        across heterogeneous shapes, ragged width vectors and the padded
+        tail cells."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 9))
+        layers, widths = [], []
+        for i in range(n):
+            layers.append(LayerShape(
+                name=f"l{i}",
+                tokens=int(rng.integers(1, 10000)),
+                d_in=int(rng.integers(1, 10000)),
+                width=1,
+                shard_in=int(rng.choice([1, 2, 4, 8, 16])),
+                shard_out=int(rng.choice([1, 2, 3, 4, 8, 16])),
+                dtype_bits=int(rng.choice([16, 32])),
+                flop_multiplier=float(rng.choice([1.0, 0.5, 3.0])),
+            ))
+            widths.append(rng.integers(1, 60000,
+                                       size=int(rng.integers(0, 24))))
+        stacked = MODEL.evaluate_model_batch(layers, widths)
+        for i, (layer, w) in enumerate(zip(layers, widths)):
+            per_layer = MODEL.evaluate_batch(layer, w)
+            row = stacked.layer_table(i)
+            for f in ("widths", "latency_s", "utilization", "throughput",
+                      "waves", "flops", "padded_flops"):
+                np.testing.assert_array_equal(
+                    getattr(per_layer, f), getattr(row, f), err_msg=f)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_latency_model_batch_column(self, seed):
+        """``latency_model_batch`` rows are exactly the per-layer
+        ``latency_batch`` vectors."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 7))
+        layers = [LayerShape(f"l{i}", tokens=int(rng.integers(1, 8192)),
+                             d_in=int(rng.integers(1, 8192)), width=1,
+                             shard_out=int(rng.choice([1, 4, 16])))
+                  for i in range(n)]
+        widths = [rng.integers(1, 50000, size=int(rng.integers(1, 17)))
+                  for _ in range(n)]
+        rows = MODEL.latency_model_batch(layers, widths)
+        for layer, w, row in zip(layers, widths, rows):
+            np.testing.assert_array_equal(MODEL.latency_batch(layer, w),
+                                          row)
+
     def test_staircase_edges_matches_scan(self):
         """Vectorized edge detection equals the historical Python scan."""
         layer = LayerShape("l", tokens=2048, d_in=1024, width=1,
@@ -194,3 +253,138 @@ class TestOptimizerParity:
         opt.optimize_accuracy(layers, latency_slack=0.2)
         assert model.eval_points == sum(
             len(tl.candidates) + 1 for tl in layers)
+
+
+class TestStackedBuildParity:
+    """The stacked table build equals the historical per-group build —
+    including the vectorized shared-grid prep path and the min/max width
+    fences."""
+
+    @staticmethod
+    def _assert_tables_equal(a, b, full):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            assert x.name == y.name and x.pos == y.pos
+            assert x.lo == y.lo and x.hi == y.hi
+            assert x.start_down == y.start_down and x.start_up == y.start_up
+            assert x.start_width == y.start_width
+            assert x.start_lat == y.start_lat
+            assert x.start_par == y.start_par
+            if full:
+                np.testing.assert_array_equal(x.lat, y.lat)
+            else:
+                assert x.lat == y.lat
+
+    @given(layers=layer_sets(), full=st.sampled_from([False, True]))
+    @settings(max_examples=15, deadline=None)
+    def test_unshared_grids(self, layers, full):
+        grouped = OPT._build_tables(layers, full=full, stacked=False)
+        stacked = OPT._build_tables(layers, full=full, stacked=True)
+        self._assert_tables_equal(grouped, stacked, full)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           full=st.sampled_from([False, True]))
+    @settings(max_examples=15, deadline=None)
+    def test_shared_grid_vectorized_prep(self, seed, full):
+        """Layers handed the SAME candidates array object take the
+        vectorized cursor-math path; fences and cursors must still match
+        the scalar prep exactly."""
+        rng = np.random.default_rng(seed)
+        cands = analytic_candidates(
+            HW, LayerShape("r", 4096, 4096, 26000, shard_out=16),
+            max_width=26000)
+        layers = []
+        for i in range(int(rng.integers(4, 10))):
+            w = int(rng.integers(1024, 25000))
+            min_w = int(rng.choice([1, 2048, 30000]))
+            max_w = [None, int(w * 1.3), 100][int(rng.integers(0, 3))]
+            shape = LayerShape(f"L{i}", tokens=4096, d_in=4096, width=w,
+                               shard_out=16)
+            layers.append(TunableLayer(layer=shape, candidates=cands,
+                                       params_per_unit=4096,
+                                       min_width=min_w, max_width=max_w))
+        assert all(tl.candidates is cands for tl in layers)
+        grouped = OPT._build_tables(layers, full=full, stacked=False)
+        stacked = OPT._build_tables(layers, full=full, stacked=True)
+        self._assert_tables_equal(grouped, stacked, full)
+
+    def test_empty_candidates(self):
+        shape = LayerShape("e", tokens=128, d_in=128, width=700,
+                           shard_out=1)
+        layers = [TunableLayer(layer=shape,
+                               candidates=np.array([], dtype=np.int64),
+                               params_per_unit=128),
+                  make_tl(4096, name="n")]
+        for full in (False, True):
+            grouped = OPT._build_tables(layers, full=full, stacked=False)
+            stacked = OPT._build_tables(layers, full=full, stacked=True)
+            self._assert_tables_equal(grouped, stacked, full)
+
+
+class TestRevertMoveLog:
+    """The latency-round revert removes the down-Move itself; ``moves``
+    must replay from ``old_widths`` to exactly ``new_widths`` on both
+    engines (this was the seed's move-log quirk, now fixed on both
+    sides)."""
+
+    @staticmethod
+    def _replay(res):
+        widths = dict(res.old_widths)
+        for mv in res.moves:
+            assert widths[mv.layer] == mv.old_width, \
+                f"move log out of order for {mv.layer}"
+            widths[mv.layer] = mv.new_width
+        return widths
+
+    @staticmethod
+    def _corner_layers():
+        """Two layers engineered so the balance loop applies an up-move
+        AFTER the down-move and the window is still missed: the down-move
+        must be reverted while the up-move stays."""
+        q = HW.lane  # shard_out=1 -> quantum 128
+        a = LayerShape("A", tokens=8192, d_in=8192, width=4133,
+                       shard_out=1)
+        b = LayerShape("B", tokens=1024, d_in=1024, width=2048,
+                       shard_out=1)
+        return [
+            TunableLayer(layer=a,
+                         candidates=analytic_candidates(HW, a,
+                                                        max_width=6400),
+                         params_per_unit=1000.0),
+            TunableLayer(layer=b,
+                         candidates=analytic_candidates(HW, b,
+                                                        max_width=6400),
+                         params_per_unit=200.0),
+        ]
+
+    def test_corner_revert_keeps_up_move(self):
+        layers = self._corner_layers()
+        # tau tiny: A's down-move (dp = -37 * 1000) cannot be balanced
+        # into the window even after B's up-move (+128 * 200), so the
+        # down-move reverts while B's up-move stays applied.
+        res = OPT.optimize_latency(layers, tau=100.0, delta=0.0,
+                                   max_rounds=1)
+        assert res.new_widths["A"] == 4133          # reverted
+        assert res.new_widths["B"] == 2176          # up-move kept
+        kinds = [(m.layer, m.kind) for m in res.moves]
+        assert ("A", "down") not in kinds
+        assert ("B", "up") in kinds
+        assert self._replay(res) == res.new_widths
+
+    def test_corner_parity_scalar_vs_batched(self):
+        layers = self._corner_layers()
+        a = SCALAR_OPT.optimize_latency(layers, tau=100.0, delta=0.0,
+                                        max_rounds=1)
+        b = OPT.optimize_latency(layers, tau=100.0, delta=0.0,
+                                 max_rounds=1)
+        assert a.new_widths == b.new_widths
+        assert a.moves == b.moves
+        assert self._replay(a) == a.new_widths
+
+    @given(layers=layer_sets(), tau_frac=st.floats(0.001, 0.2))
+    @settings(max_examples=20, deadline=None)
+    def test_moves_always_replay_to_widths(self, layers, tau_frac):
+        total_p = sum(tl.params(tl.layer.width) for tl in layers)
+        res = OPT.optimize_latency(layers, tau=tau_frac * total_p,
+                                   delta=0.95)
+        assert self._replay(res) == res.new_widths

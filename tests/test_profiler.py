@@ -1,0 +1,59 @@
+"""Profiler table builders: stacked model-level sweeps and the hlo sweep's
+shared compile cache."""
+
+import numpy as np
+import pytest
+
+from repro.core import LayerShape, TPU_V5E
+from repro.core import profiler
+
+HW = TPU_V5E
+
+
+def make_layers(n=4):
+    return [LayerShape(f"l{i}", tokens=2048, d_in=1024 + 128 * i,
+                       width=4096, shard_out=16) for i in range(n)]
+
+
+class TestAnalyticStack:
+    def test_stack_matches_per_layer(self):
+        """``analytic_profile_stack`` rows are bit-for-bit the per-layer
+        ``analytic_profile`` sweeps."""
+        layers = make_layers()
+        widths = [np.arange(512, 8193, 512) for _ in layers]
+        stacked = profiler.analytic_profile_stack(HW, layers, widths)
+        assert len(stacked) == len(layers)
+        for layer, w, prof in zip(layers, widths, stacked):
+            single = profiler.analytic_profile(HW, layer, w)
+            assert prof.name == layer.name and prof.source == "analytic"
+            for f in ("widths", "latency_s", "utilization", "throughput",
+                      "waves"):
+                np.testing.assert_array_equal(
+                    getattr(single, f), getattr(prof, f), err_msg=f)
+
+    def test_ragged_width_vectors(self):
+        layers = make_layers(3)
+        widths = [np.arange(128, 1025, 128), np.array([4096]),
+                  np.arange(256, 4097, 256)]
+        stacked = profiler.analytic_profile_stack(HW, layers, widths)
+        for w, prof in zip(widths, stacked):
+            assert len(prof.widths) == len(w)
+
+
+@pytest.mark.slow
+class TestHloProfile:
+    def test_widths_length_and_jit_reuse(self):
+        """Regression for the per-width ``jax.jit`` rebuild: the sweep
+        must return one row per width and reuse ONE module-level jit
+        across the whole sweep (and across calls)."""
+        layer = LayerShape("l", tokens=64, d_in=64, width=256)
+        widths = [64, 128, 256]
+        prof = profiler.hlo_profile(HW, layer, widths)
+        for f in ("widths", "latency_s", "utilization", "throughput",
+                  "waves"):
+            assert len(getattr(prof, f)) == len(widths), f
+        jit_first = profiler._matmul_jit()
+        prof2 = profiler.hlo_profile(HW, layer, widths)
+        assert profiler._matmul_jit() is jit_first
+        np.testing.assert_array_equal(prof.latency_s, prof2.latency_s)
+        assert (prof.throughput > 0).all()

@@ -69,6 +69,36 @@ def test_overflowing_slots(engine):
         assert len(r.tokens) == 4
 
 
+def test_planner_consulted_at_batch_boundaries(engine):
+    """With a width planner attached, every generated batch records the
+    plan selected for its token volume (the swap point for width
+    configs)."""
+    from repro.core import (LayerShape, TPU_V5E, TunableLayer,
+                            analytic_candidates)
+    from repro.serving import ServingWidthPlanner, TrafficClass
+
+    eng, cfg = engine
+    ref = LayerShape("ffn", tokens=4096, d_in=4096, width=11008,
+                     shard_out=16)
+    cands = analytic_candidates(TPU_V5E, ref, max_width=16384)
+    templates = [TunableLayer(layer=ref, candidates=cands,
+                              params_per_unit=4096)]
+    planner = ServingWidthPlanner(TPU_V5E, templates)
+    planner.plan([TrafficClass("decode", 64), TrafficClass("prefill", 4096)])
+
+    eng.planner = planner
+    eng.plan_log.clear()
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,))
+                    .astype(np.int32), max_new_tokens=2)
+            for _ in range(6)]   # > batch_slots=4 -> two batches
+    eng.generate(reqs)
+    eng.planner = None
+    assert len(eng.plan_log) == 2
+    for plan in eng.plan_log:
+        assert plan.traffic.name == "decode"   # 4*8=32 tokens -> decode
+
+
 def test_mixed_temperature_batch(engine):
     """Greedy slots in a mixed greedy/sampled batch must match a pure
     greedy run (the hoisted use_t/temp arrays select per slot)."""

@@ -1,0 +1,246 @@
+"""Disk-backed profile-table cache: round-trips, invalidation, and the
+warm-cache optimizer fast path (zero model sweeps)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LayerShape, ProfileTableCache, TPU_V4, TPU_V5E, TailEffectOptimizer,
+    TunableLayer, WaveQuantizationModel, analytic_candidates,
+    hardware_fingerprint,
+)
+from repro.core import table_cache as tc
+
+HW = TPU_V5E
+
+
+def make_layers(n=8, tokens=4096, d_in=4096):
+    out = []
+    for i in range(n):
+        shape = LayerShape(f"l{i}", tokens=tokens, d_in=d_in,
+                           width=2048 * (i % 4 + 2) + 256, shard_out=16)
+        cands = analytic_candidates(HW, shape,
+                                    max_width=int(shape.width * 1.6))
+        out.append(TunableLayer(layer=shape, candidates=cands,
+                                params_per_unit=d_in))
+    return out
+
+
+class TestRoundTrip:
+    def test_stair_table_round_trip(self, tmp_path):
+        """write -> reload through a separate cache instance (the
+        separate-process case) -> identical StairTable arrays."""
+        layer = LayerShape("l", tokens=2048, d_in=1024, width=4096,
+                           shard_out=16)
+        widths = np.arange(256, 8193, 256)
+        table = WaveQuantizationModel(HW).evaluate_batch(layer, widths)
+        ProfileTableCache(tmp_path).put_stair_table(HW, layer, table)
+
+        reloaded = ProfileTableCache(tmp_path).get_stair_table(
+            HW, layer, widths)
+        assert reloaded is not None
+        for f in ("widths", "latency_s", "utilization", "throughput",
+                  "waves", "flops", "padded_flops"):
+            np.testing.assert_array_equal(
+                getattr(table, f), getattr(reloaded, f), err_msg=f)
+
+    def test_raw_arrays_round_trip(self, tmp_path):
+        layer = LayerShape("l", tokens=64, d_in=64, width=100)
+        widths = np.array([1, 5, 128], dtype=np.int64)
+        lat = np.array([1e-6, 2e-6, 3e-6])
+        cache = ProfileTableCache(tmp_path)
+        cache.put(HW, layer, widths, {"latency_s": lat})
+        hit = ProfileTableCache(tmp_path).get(HW, layer, widths)
+        assert hit is not None
+        np.testing.assert_array_equal(hit["latency_s"], lat)
+        assert cache.stats.writes == 1
+
+    def test_name_and_width_excluded_from_key(self, tmp_path):
+        """Two identically shaped layers share entries regardless of name
+        and nominal width (the swept start width lives in the width
+        vector, not the shape key)."""
+        a = LayerShape("a", tokens=64, d_in=64, width=100)
+        b = LayerShape("b", tokens=64, d_in=64, width=999)
+        widths = np.array([128, 256], dtype=np.int64)
+        cache = ProfileTableCache(tmp_path)
+        cache.put(HW, a, widths, {"latency_s": np.array([1.0, 2.0])})
+        assert cache.get(HW, b, widths) is not None
+
+
+class TestInvalidation:
+    def _seed(self, tmp_path):
+        layer = LayerShape("l", tokens=64, d_in=64, width=100)
+        widths = np.array([128, 256], dtype=np.int64)
+        cache = ProfileTableCache(tmp_path)
+        cache.put(HW, layer, widths, {"latency_s": np.array([1.0, 2.0])})
+        return cache, layer, widths
+
+    def test_hardware_mismatch_misses(self, tmp_path):
+        cache, layer, widths = self._seed(tmp_path)
+        assert cache.get(TPU_V4, layer, widths) is None
+        assert hardware_fingerprint(TPU_V4) != hardware_fingerprint(HW)
+
+    def test_shape_mismatch_misses(self, tmp_path):
+        cache, layer, widths = self._seed(tmp_path)
+        import dataclasses
+        other = dataclasses.replace(layer, d_in=128)
+        assert cache.get(HW, other, widths) is None
+
+    def test_width_vector_mismatch_misses(self, tmp_path):
+        cache, layer, widths = self._seed(tmp_path)
+        assert cache.get(HW, layer, widths[:1]) is None
+        assert cache.get(HW, layer, widths + 1) is None
+
+    def test_version_bump_invalidates(self, tmp_path, monkeypatch):
+        cache, layer, widths = self._seed(tmp_path)
+        monkeypatch.setattr(tc, "CACHE_VERSION", tc.CACHE_VERSION + 1)
+        assert ProfileTableCache(tmp_path).get(HW, layer, widths) is None
+
+    def test_corrupt_entry_misses(self, tmp_path):
+        cache, layer, widths = self._seed(tmp_path)
+        [path] = list(cache.root.glob("??/*.npz"))
+        path.write_bytes(b"not an npz")
+        assert ProfileTableCache(tmp_path).get(HW, layer, widths) is None
+
+    def test_clear(self, tmp_path):
+        cache, layer, widths = self._seed(tmp_path)
+        assert cache.clear() == 1
+        assert cache.get(HW, layer, widths) is None
+
+
+class TestFromEnv:
+    def test_unset_disables(self, monkeypatch):
+        monkeypatch.delenv(tc.CACHE_DIR_ENV, raising=False)
+        assert ProfileTableCache.from_env() is None
+
+    def test_unset_with_default(self, monkeypatch, tmp_path):
+        monkeypatch.delenv(tc.CACHE_DIR_ENV, raising=False)
+        cache = ProfileTableCache.from_env(default=str(tmp_path))
+        assert cache is not None and cache.root == tmp_path
+
+    @pytest.mark.parametrize("token", ["", "0", "off", "NONE", "Disabled"])
+    def test_disable_tokens(self, monkeypatch, token):
+        monkeypatch.setenv(tc.CACHE_DIR_ENV, token)
+        assert ProfileTableCache.from_env() is None
+
+    def test_env_dir_wins(self, monkeypatch, tmp_path):
+        monkeypatch.setenv(tc.CACHE_DIR_ENV, str(tmp_path / "c"))
+        cache = ProfileTableCache.from_env(default="/ignored")
+        assert cache is not None and cache.root == tmp_path / "c"
+
+
+class TestWarmOptimizer:
+    def test_warm_optimize_latency_zero_sweeps(self, tmp_path):
+        """Acceptance: a warm cache makes ``optimize_latency`` skip every
+        model sweep (``eval_calls == 0``) and return identical results."""
+        layers = make_layers()
+        cold_model = WaveQuantizationModel(HW)
+        cold = TailEffectOptimizer(cold_model,
+                                   cache=ProfileTableCache(tmp_path))
+        res_cold = cold.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert cold_model.eval_calls > 0
+
+        warm_model = WaveQuantizationModel(HW)
+        warm_cache = ProfileTableCache(tmp_path)
+        warm = TailEffectOptimizer(warm_model, cache=warm_cache)
+        res_warm = warm.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert warm_model.eval_calls == 0
+        assert warm_model.eval_points == 0
+        assert warm_cache.stats.hits == len(layers)
+        assert res_warm.new_widths == res_cold.new_widths
+        assert res_warm.moves == res_cold.moves
+        assert res_warm.latency_new_s == res_cold.latency_new_s
+
+    def test_warm_optimize_accuracy_zero_sweeps(self, tmp_path):
+        layers = make_layers()
+        cold = TailEffectOptimizer(WaveQuantizationModel(HW),
+                                   cache=ProfileTableCache(tmp_path))
+        res_cold = cold.optimize_accuracy(layers, latency_slack=0.1)
+        warm_model = WaveQuantizationModel(HW)
+        warm = TailEffectOptimizer(warm_model,
+                                   cache=ProfileTableCache(tmp_path))
+        res_warm = warm.optimize_accuracy(layers, latency_slack=0.1)
+        assert warm_model.eval_calls == 0
+        assert res_warm.new_widths == res_cold.new_widths
+
+    def test_cached_equals_uncached(self, tmp_path):
+        """Running through the cache must not change any result."""
+        layers = make_layers()
+        plain = TailEffectOptimizer(WaveQuantizationModel(HW))
+        res_plain = plain.optimize_latency(layers, tau=1e9, delta=0.95)
+        for _ in range(2):  # cold then warm
+            cached = TailEffectOptimizer(WaveQuantizationModel(HW),
+                                         cache=ProfileTableCache(tmp_path))
+            res = cached.optimize_latency(layers, tau=1e9, delta=0.95)
+            assert res.new_widths == res_plain.new_widths
+            assert res.moves == res_plain.moves
+            assert res.latency_new_s == res_plain.latency_new_s
+
+    def test_stack_bundle_single_file(self, tmp_path):
+        """Stacks >= bundle_min_layers cache as ONE whole-stack bundle:
+        one file on disk, warm run one hit and zero sweeps, results
+        identical to the per-layer granularity."""
+        layers = make_layers(8)
+        cold_cache = ProfileTableCache(tmp_path)
+        cold = TailEffectOptimizer(WaveQuantizationModel(HW),
+                                   cache=cold_cache, bundle_min_layers=4)
+        res_cold = cold.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert len(list(cold_cache.root.glob("??/*.npz"))) == 1
+
+        warm_model = WaveQuantizationModel(HW)
+        warm_cache = ProfileTableCache(tmp_path)
+        warm = TailEffectOptimizer(warm_model, cache=warm_cache,
+                                   bundle_min_layers=4)
+        res_warm = warm.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert warm_model.eval_calls == 0
+        assert warm_cache.stats.hits == 1
+        assert res_warm.new_widths == res_cold.new_widths
+        assert res_warm.moves == res_cold.moves
+
+        plain = TailEffectOptimizer(WaveQuantizationModel(HW))
+        res_plain = plain.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert res_warm.new_widths == res_plain.new_widths
+
+    def test_stack_bundle_invalidates_on_any_layer_change(self, tmp_path):
+        layers = make_layers(8)
+        opt = TailEffectOptimizer(WaveQuantizationModel(HW),
+                                  cache=ProfileTableCache(tmp_path),
+                                  bundle_min_layers=4)
+        opt.optimize_latency(layers, tau=1e9, delta=0.95)
+        import dataclasses
+        changed = list(layers)
+        changed[3] = dataclasses.replace(
+            layers[3],
+            layer=dataclasses.replace(layers[3].layer, d_in=8192))
+        model = WaveQuantizationModel(HW)
+        warm = TailEffectOptimizer(model, cache=ProfileTableCache(tmp_path),
+                                   bundle_min_layers=4)
+        warm.optimize_latency(changed, tau=1e9, delta=0.95)
+        assert model.eval_calls > 0   # bundle missed -> one fresh sweep
+
+    def test_partial_warm_sweeps_only_misses(self, tmp_path):
+        """New layers added to a warm cache: only they are swept.
+        (Shapes must be pairwise distinct here — the key ignores layer
+        names, so repeated shapes would all hit.)"""
+        layers = []
+        for i in range(8):
+            shape = LayerShape(f"l{i}", tokens=4096, d_in=4096,
+                               width=2048 * (i + 2) + 256, shard_out=16)
+            cands = analytic_candidates(HW, shape,
+                                        max_width=int(shape.width * 1.6))
+            layers.append(TunableLayer(layer=shape, candidates=cands,
+                                       params_per_unit=4096))
+        TailEffectOptimizer(
+            WaveQuantizationModel(HW),
+            cache=ProfileTableCache(tmp_path)).optimize_latency(
+                layers[:5], tau=1e9, delta=0.95)
+        model = WaveQuantizationModel(HW)
+        cache = ProfileTableCache(tmp_path)
+        opt = TailEffectOptimizer(model, cache=cache)
+        res = opt.optimize_latency(layers, tau=1e9, delta=0.95)
+        assert cache.stats.hits == 5
+        assert model.eval_calls == 1           # one stacked sweep
+        assert model.eval_points <= 3 * 3      # only the 3 missing layers
+        plain = TailEffectOptimizer(WaveQuantizationModel(HW))
+        assert res.new_widths == plain.optimize_latency(
+            layers, tau=1e9, delta=0.95).new_widths

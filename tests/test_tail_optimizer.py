@@ -11,8 +11,9 @@ except ImportError:  # minimal env: deterministic in-repo fallback
 from repro.core import (
     LayerShape, TPU_V5E, TailEffectOptimizer, TunableLayer,
     WaveQuantizationModel, analytic_candidates, discretize_pruning_space,
-    snap_down, snap_nearest, snap_up,
+    snap_down, snap_nearest, snap_up, tunable_from_profile,
 )
+from repro.core.profiler import analytic_profile
 
 HW = TPU_V5E
 MODEL = WaveQuantizationModel(HW)
@@ -98,6 +99,70 @@ class TestAccuracyOriented:
         res0 = OPT.optimize_accuracy(layers, latency_slack=0.0)
         res1 = OPT.optimize_accuracy(layers, latency_slack=0.3)
         assert res1.param_gain > res0.param_gain
+
+
+class TestMeasuredTables:
+    """Algorithm 2 over measured LayerProfile tables (the paper's nvprof
+    flow): the optimizer only reads latency/params arrays, so feeding it
+    a profile that matches the analytic model must reproduce the analytic
+    results with ZERO model sweeps."""
+
+    def _measured_layers(self, n=4):
+        analytic, measured = [], []
+        for k in range(n):
+            tl = make_tl(2048 * (k + 2) + 256, name=f"L{k}")
+            analytic.append(tl)
+            widths = np.unique(np.append(tl.candidates, tl.layer.width))
+            prof = analytic_profile(HW, tl.layer, widths)
+            measured.append(TunableLayer(
+                layer=tl.layer, candidates=tl.candidates,
+                params_per_unit=tl.params_per_unit, measured=prof))
+        return analytic, measured
+
+    def test_latency_mode_matches_analytic(self):
+        analytic, measured = self._measured_layers()
+        model = WaveQuantizationModel(HW)
+        res_m = TailEffectOptimizer(model).optimize_latency(
+            measured, tau=1e9, delta=0.95)
+        assert model.eval_calls == 0          # never touched the model
+        res_a = OPT.optimize_latency(analytic, tau=1e9, delta=0.95)
+        assert res_m.new_widths == res_a.new_widths
+        assert res_m.moves == res_a.moves
+
+    def test_accuracy_mode_matches_analytic(self):
+        analytic, measured = self._measured_layers()
+        model = WaveQuantizationModel(HW)
+        res_m = TailEffectOptimizer(model).optimize_accuracy(
+            measured, latency_slack=0.2)
+        assert model.eval_calls == 0
+        res_a = OPT.optimize_accuracy(analytic, latency_slack=0.2)
+        assert res_m.new_widths == res_a.new_widths
+
+    def test_missing_width_raises(self):
+        tl = make_tl(4096 + 256, name="L")
+        prof = analytic_profile(HW, tl.layer, tl.candidates)  # no start!
+        bad = TunableLayer(layer=tl.layer, candidates=tl.candidates,
+                           params_per_unit=tl.params_per_unit,
+                           measured=prof)
+        with pytest.raises(ValueError, match="missing"):
+            OPT.optimize_latency([bad], tau=1e9)
+
+    def test_tunable_from_profile_end_to_end(self):
+        """Candidates AND latencies both derived from the profile table
+        (paper Eq. 4 then Algorithm 2) — no analytic model involved."""
+        shape = LayerShape("L", tokens=4096, d_in=4096, width=11008,
+                           shard_out=16)
+        q = 16 * HW.lane
+        widths = np.unique(np.append(
+            np.arange(q // 4, 16384 + 1, q // 4), shape.width))
+        prof = analytic_profile(HW, shape, widths)
+        tl = tunable_from_profile(shape, prof, params_per_unit=4096)
+        assert tl.measured is prof
+        model = WaveQuantizationModel(HW)
+        res = TailEffectOptimizer(model).optimize_accuracy([tl])
+        assert model.eval_calls == 0
+        assert res.new_widths["L"] == 12288   # right edge of wave 6
+        assert res.latency_new_s == pytest.approx(res.latency_old_s)
 
 
 class TestSnap:

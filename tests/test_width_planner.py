@@ -1,0 +1,109 @@
+"""Serving width planner: per-traffic-class Algorithm 2 on the stacked
+table engine, persistent across restarts via the profile-table cache."""
+
+import numpy as np
+
+from repro.core import (
+    LayerShape, ProfileTableCache, TPU_V5E, TunableLayer,
+    analytic_candidates,
+)
+from repro.serving import ServingWidthPlanner, TrafficClass
+
+HW = TPU_V5E
+
+
+def make_templates(n=6):
+    """FFN stack templates at a reference token count, sharing one
+    candidate grid (the vectorized-prep fast path)."""
+    ref = LayerShape("ref", tokens=4096, d_in=4096, width=26000,
+                     shard_out=16)
+    cands = analytic_candidates(HW, ref, max_width=26000)
+    out = []
+    for i in range(n):
+        shape = LayerShape(f"ffn{i}", tokens=4096, d_in=4096,
+                           width=2048 * (i % 3 + 2) + 256, shard_out=16)
+        out.append(TunableLayer(layer=shape, candidates=cands,
+                                params_per_unit=4096))
+    return out
+
+
+class TestPlanner:
+    TRAFFIC = [TrafficClass("decode", 256),
+               TrafficClass("mixed", 4096),
+               TrafficClass("prefill", 65536)]
+
+    def test_plans_every_class(self):
+        planner = ServingWidthPlanner(HW, make_templates())
+        plans = planner.plan(self.TRAFFIC)
+        assert set(plans) == {"decode", "mixed", "prefill"}
+        for plan in plans.values():
+            assert plan.latency_s <= plan.baseline_latency_s + 1e-15
+            assert set(plan.widths) == {f"ffn{i}" for i in range(6)}
+
+    def test_classes_get_distinct_plans(self):
+        """The paper's core observation (Tables 4/5): no one-fit-all
+        config — different token volumes move the compute/memory
+        crossover, so at least one layer width should differ between the
+        extreme classes."""
+        planner = ServingWidthPlanner(HW, make_templates())
+        plans = planner.plan(self.TRAFFIC)
+        assert plans["decode"].widths != plans["prefill"].widths \
+            or plans["decode"].latency_s != plans["prefill"].latency_s
+
+    def test_select_nearest_class(self):
+        planner = ServingWidthPlanner(HW, make_templates())
+        planner.plan(self.TRAFFIC)
+        assert planner.select(200).traffic.name == "decode"
+        assert planner.select(5000).traffic.name == "mixed"
+        assert planner.select(10**6).traffic.name == "prefill"
+
+    def test_select_before_plan_raises(self):
+        planner = ServingWidthPlanner(HW, make_templates())
+        try:
+            planner.select(100)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("expected ValueError")
+
+    def test_retokened_classes_drop_measured_profiles(self):
+        """A measured profile is only valid at its profiled token count:
+        re-tokened traffic classes must fall back to the analytic model
+        instead of silently reusing stale latencies (a same-tokens class
+        may keep the profile)."""
+        from repro.core import WaveQuantizationModel, tunable_from_profile
+        from repro.core.profiler import analytic_profile
+
+        shape = LayerShape("ffn", tokens=4096, d_in=4096, width=11008,
+                           shard_out=16)
+        q = 16 * HW.lane
+        widths = np.unique(np.append(np.arange(q, 16385, q), shape.width))
+        prof = analytic_profile(HW, shape, widths)
+        tl = tunable_from_profile(shape, prof, params_per_unit=4096)
+        planner = ServingWidthPlanner(HW, [tl])
+        retok = planner._retokened(8192)
+        assert retok[0].measured is None
+        assert retok[0].layer.tokens == 8192
+        same = planner._retokened(4096)
+        assert same[0].measured is prof
+        # end-to-end: a re-tokened class plans via the model, not the
+        # stale profile
+        plans = planner.plan([TrafficClass("prefill", 8192)])
+        assert planner.model.eval_calls > 0
+        assert plans["prefill"].baseline_latency_s > 0
+
+    def test_warm_restart_skips_sweeps(self, tmp_path):
+        """A restarted planner with the same cache performs zero model
+        sweeps and reproduces the same plans (the cross-process
+        profile-table reuse the cache exists for)."""
+        cold = ServingWidthPlanner(HW, make_templates(),
+                                   cache=ProfileTableCache(tmp_path))
+        cold_plans = cold.plan(self.TRAFFIC)
+        assert cold.model.eval_calls > 0
+
+        warm = ServingWidthPlanner(HW, make_templates(),
+                                   cache=ProfileTableCache(tmp_path))
+        warm_plans = warm.plan(self.TRAFFIC)
+        assert warm.model.eval_calls == 0
+        assert {k: p.widths for k, p in warm_plans.items()} \
+            == {k: p.widths for k, p in cold_plans.items()}
