@@ -24,6 +24,16 @@ to one dispatch per layer):
     npz tables) vs warm (every table served from disk; the warm run makes
     ZERO model sweeps, asserted here).
 
+A fourth phase pins the serving-side swap cost on a real (reduced)
+transformer pytree:
+
+  * ``width_swap`` — 32 batch boundaries all selecting the same plan,
+    re-materialized from scratch every boundary (naive) vs served from
+    the ``WidthSwapper`` plan cache (one cold materialize + 31
+    allocation-free hits).  The gated ``speedup`` is the naive/cached
+    wall ratio — dominated by materialization cost on both sides, so it
+    stays stable on shared machines.
+
 Results go to ``BENCH_tail_optimizer.json`` — wall time per phase,
 evaluate-call counts, and the speedup — extending the repo's perf
 trajectory.  ``benchmarks/run.py --check`` reruns this file and fails when
@@ -111,6 +121,72 @@ def _time_interleaved(fns, repeats: int):
             fn()
             best[i] = min(best[i], time.perf_counter() - t0)
     return best
+
+
+SWAP_BOUNDARIES = 32
+
+
+def _width_swap_phase(verbose: bool) -> dict:
+    """Live width-swap cost on a real reduced-transformer pytree: naive
+    re-materialization every batch boundary vs the WidthSwapper plan
+    cache (jax imported lazily — the optimizer phases stay NumPy-only)."""
+    import jax
+    from repro.configs import get_config, reduced_config
+    from repro.models import init_params
+    from repro.serving import (
+        TrafficClass, WidthPlan, WidthSwapper, serving_templates,
+    )
+
+    cfg = reduced_config(get_config("qwen1.5-0.5b"), d_model=256,
+                         n_layers=8, n_heads=8, d_ff=1024)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, modules = serving_templates(cfg, HW, sites=("mlp", "attn"))
+    widths = {}
+    for name, ref in modules.items():
+        if ref.site == "mlp":
+            widths[name] = (cfg.d_ff // 2 if ref.layer % 2
+                            else 3 * cfg.d_ff // 4)
+        else:
+            widths[name] = (cfg.n_heads - 2 * (ref.layer % 2)) \
+                * cfg.head_dim
+    plan = WidthPlan(traffic=TrafficClass("decode", 2048), widths=widths,
+                     latency_s=1.0, baseline_latency_s=2.0,
+                     satisfied=True, modules=modules)
+    sw = WidthSwapper(params, cfg)
+    warm_p, _ = sw.apply(plan)   # compile the slicing kernels once
+    jax.block_until_ready(jax.tree.leaves(warm_p))
+
+    def boundaries(clear_every: bool):
+        def fn():
+            sw._cache.clear()
+            hits = 0
+            out = None
+            for _ in range(SWAP_BOUNDARIES):
+                if clear_every:
+                    sw._cache.clear()
+                out, ev = sw.apply(plan)
+                hits += ev.cache_hit
+            jax.block_until_ready(jax.tree.leaves(out))
+            assert hits == (0 if clear_every else SWAP_BOUNDARIES - 1)
+        return fn
+
+    t_naive, t_cached = _time_interleaved(
+        [boundaries(True), boundaries(False)], REPEATS)
+    phase = {
+        "n_layers": cfg.n_layers,
+        "boundaries": SWAP_BOUNDARIES,
+        "naive_wall_s": t_naive,
+        "cached_wall_s": t_cached,
+        "cold_swap_s": t_naive / SWAP_BOUNDARIES,
+        "speedup": t_naive / t_cached if t_cached > 0 else float("inf"),
+        "warm_cache_hits": SWAP_BOUNDARIES - 1,
+    }
+    if verbose:
+        print(f"  width_swap: naive {t_naive*1e3:8.2f}ms -> plan-cached "
+              f"{t_cached*1e3:8.2f}ms over {SWAP_BOUNDARIES} boundaries  "
+              f"{phase['speedup']:6.1f}x "
+              f"(cold swap {phase['cold_swap_s']*1e6:.0f}us)")
+    return phase
 
 
 def run(csv_rows: list, verbose: bool = True,
@@ -241,6 +317,8 @@ def run(csv_rows: list, verbose: bool = True,
               f"{phases['table_cache_1024x1024']['cold_over_warm']:6.1f}x "
               f"(warm model sweeps: 0)")
 
+    phases["width_swap"] = _width_swap_phase(verbose)
+
     report = {
         "benchmark": "optimizer_scale",
         "scenario": {
@@ -279,6 +357,11 @@ def run(csv_rows: list, verbose: bool = True,
                      f"{cc['warm_wall_s'] * 1e6:.0f}",
                      f"cold/warm={cc['cold_over_warm']:.1f}x;"
                      f"warm_sweeps=0"))
+    ws = phases["width_swap"]
+    csv_rows.append(("width_swap_32_boundaries",
+                     f"{ws['cached_wall_s'] * 1e6:.0f}",
+                     f"speedup={ws['speedup']:.1f}x;"
+                     f"cold_swap_us={ws['cold_swap_s'] * 1e6:.0f}"))
     return report
 
 

@@ -16,6 +16,7 @@ from repro.core.tail_optimizer import (
     discretize_pruning_space, tunable_from_profile,
 )
 from repro.core.table_cache import ProfileTableCache, hardware_fingerprint
+from repro.core.plan_address import ModuleRef, plan_key, snap_heads
 from repro.core.roofline import RooflineReport, build_report
 from repro.core.hlo_analysis import (
     parse_collectives, CollectiveSummary, cost_summary, count_ops,
@@ -31,6 +32,6 @@ __all__ = [
     "TailEffectOptimizer", "TunableLayer", "OptimizationResult", "Move",
     "discretize_pruning_space", "tunable_from_profile",
     "ProfileTableCache", "hardware_fingerprint", "RooflineReport",
-    "build_report",
+    "build_report", "ModuleRef", "plan_key", "snap_heads",
     "parse_collectives", "CollectiveSummary", "cost_summary", "count_ops",
 ]

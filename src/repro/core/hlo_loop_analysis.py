@@ -29,8 +29,13 @@ _COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _FIRST_SHAPE = re.compile(
     r"^\(?\s*(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# Operand lists may carry full type annotations depending on the XLA
+# version ("dot(f32[128,128]{1,0} %a, ...)" vs "dot(%a, ...)"); the lazy
+# [^%()]*? prefix skips the dtype[shape]{layout} token (which may itself
+# contain commas) up to the %name that follows it.
+_OPND = r"[^%()]*?%([\w.\-]+)"
 _DOT_RE = re.compile(
-    r"\bdot\(\s*%([\w.\-]+)\s*,\s*%([\w.\-]+)\s*\)(.*)$")
+    r"\bdot\(\s*" + _OPND + r"\s*,\s*" + _OPND + r"\s*\)(.*)$")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _WHILE_RE = re.compile(
     r"\bwhile\(.*?\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
@@ -40,7 +45,8 @@ _TF_COMP_RE = re.compile(
     r"(?:true_computation|false_computation)=%([\w.\-]+)")
 _CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
 _COMPARE_RE = re.compile(
-    r"compare\(\s*%([\w.\-]+)\s*,\s*%([\w.\-]+)\s*\),\s*direction=(\w+)")
+    r"compare\(\s*[^%()]*?%([\w.\-]+)\s*,\s*[^%()]*?"
+    r"%([\w.\-]+)\s*\),\s*direction=(\w+)")
 
 
 @dataclasses.dataclass

@@ -113,6 +113,7 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     writes: int = 0
+    evictions: int = 0
 
 
 def _atomic_savez(path: Path, **arrays) -> None:
@@ -133,22 +134,37 @@ def _atomic_savez(path: Path, **arrays) -> None:
 
 
 class ProfileTableCache:
-    """npz-file cache of per-layer (width -> latency/U/T/...) tables."""
+    """npz-file cache of per-layer (width -> latency/U/T/...) tables.
 
-    def __init__(self, root: str | os.PathLike):
+    ``max_bytes`` caps the on-disk size: after every write the oldest
+    entries (least-recently *used* — reads touch an entry's mtime) are
+    evicted until the store fits, so long-lived NAS sweeps cannot
+    accumulate stale bundles without bound.  The entry just written
+    always survives, even when it alone exceeds the cap — a cache that
+    evicts its own write thrashes at 100%.  ``None`` (default) disables
+    the cap; ``clear()`` remains the manual full wipe.
+    """
+
+    def __init__(self, root: str | os.PathLike, *,
+                 max_bytes: int | None = None):
         self.root = Path(root).expanduser()
+        self.max_bytes = max_bytes
         self.stats = CacheStats()
 
     @classmethod
-    def from_env(cls, default: str | None = None) -> "ProfileTableCache | None":
+    def from_env(cls, default: str | None = None,
+                 max_bytes: int | None = None
+                 ) -> "ProfileTableCache | None":
         """Cache at ``$REPRO_TABLE_CACHE_DIR``; disable tokens (or an unset
         variable with no ``default``) return None."""
         val = os.environ.get(CACHE_DIR_ENV)
         if val is None:
-            return cls(default) if default is not None else None
+            if default is None:
+                return None
+            return cls(default, max_bytes=max_bytes)
         if val.strip().lower() in _DISABLE_TOKENS:
             return None
-        return cls(val)
+        return cls(val, max_bytes=max_bytes)
 
     # ---- raw array entries ---------------------------------------------
     def _path(self, key: str) -> Path:
@@ -176,6 +192,7 @@ class ProfileTableCache:
             self.stats.misses += 1
             return None
         self.stats.hits += 1
+        self._touch(path)
         return out
 
     def put(self, hw: HardwareSpec, layer: LayerShape, widths: np.ndarray,
@@ -186,6 +203,7 @@ class ProfileTableCache:
         _atomic_savez(path, __meta__=np.array(_meta(hw, layer)),
                       widths=w, **dict(arrays))
         self.stats.writes += 1
+        self._evict_to_cap(keep=path)
         return path
 
     # ---- whole-stack bundles -------------------------------------------
@@ -223,6 +241,7 @@ class ProfileTableCache:
             self.stats.misses += 1
             return None
         self.stats.hits += 1
+        self._touch(path)
         return lat2d
 
     def put_stack(self, hw: HardwareSpec, layers: Sequence[LayerShape],
@@ -234,6 +253,7 @@ class ProfileTableCache:
                       counts=np.asarray(counts, dtype=np.int64),
                       latency_2d=np.asarray(lat2d, dtype=np.float64))
         self.stats.writes += 1
+        self._evict_to_cap(keep=path)
         return path
 
     # ---- StairTable convenience ----------------------------------------
@@ -251,6 +271,58 @@ class ProfileTableCache:
                           **{f: arrays[f] for f in _STAIR_FIELDS})
 
     # ---- maintenance ----------------------------------------------------
+    @staticmethod
+    def _touch(path: Path) -> None:
+        """Bump an entry's mtime on a read hit: eviction order becomes
+        least-recently-USED, so a hot entry survives a sweep of writes."""
+        try:
+            os.utime(path)
+        except OSError:
+            pass
+
+    def _evict_to_cap(self, keep: Path | None = None) -> int:
+        """Evict oldest-mtime entries until the store fits ``max_bytes``.
+        ``keep`` (the entry just written) is never evicted.  Returns the
+        number of entries removed."""
+        if self.max_bytes is None:
+            return 0
+        entries = []
+        total = 0
+        for p in self.root.glob("??/*.npz"):
+            try:
+                stt = p.stat()
+            except OSError:
+                continue
+            entries.append((stt.st_mtime, stt.st_size, p))
+            total += stt.st_size
+        if total <= self.max_bytes:
+            return 0
+        removed = 0
+        for _, size, p in sorted(entries):
+            if total <= self.max_bytes:
+                break
+            if keep is not None and p == keep:
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            total -= size
+            removed += 1
+        self.stats.evictions += removed
+        return removed
+
+    def size_bytes(self) -> int:
+        """Total bytes currently stored under root (entries another
+        process removes mid-scan count as 0, like everywhere else)."""
+        total = 0
+        for p in self.root.glob("??/*.npz"):
+            try:
+                total += p.stat().st_size
+            except OSError:
+                pass
+        return total
+
     def clear(self) -> int:
         """Remove every cache entry under root; returns entries removed."""
         removed = 0

@@ -1,10 +1,11 @@
 from repro.models.transformer import (
     init_params, forward, train_loss, decode_step, init_decode_state,
     encode, count_params_analytic, layer_plan, unit_cycle,
+    decoder_layer_refs,
 )
 
 __all__ = [
     "init_params", "forward", "train_loss", "decode_step",
     "init_decode_state", "encode", "count_params_analytic", "layer_plan",
-    "unit_cycle",
+    "unit_cycle", "decoder_layer_refs",
 ]

@@ -78,6 +78,32 @@ def unit_cycle(cfg: ModelConfig, encoder: bool = False) -> int:
     return c
 
 
+def decoder_layer_refs(cfg: ModelConfig) -> list:
+    """Pytree address of every decoder layer, in layer order.
+
+    Each entry is a dict: ``kind``/``mlp_kind`` from :func:`layer_plan`,
+    plus where the layer's params live under ``params["decoder"]``:
+    ``group`` is ``"stack"`` (scanned units; ``key`` names the unit slot
+    ``u{j}`` and ``index`` the position along the stacked leading axis)
+    or ``"extra"`` (unrolled leftovers; ``key`` is ``x{j}``, ``index``
+    None).  ``init_decode_state`` lays decode states out identically, so
+    the same addresses locate a layer's KV cache.
+    """
+    plan = layer_plan(cfg, encoder=False)
+    cycle = unit_cycle(cfg)
+    n_units = len(plan) // cycle
+    refs = []
+    for i, (kind, mlpk) in enumerate(plan):
+        u, j = divmod(i, cycle)
+        if u < n_units:
+            refs.append({"kind": kind, "mlp_kind": mlpk, "group": "stack",
+                         "key": f"u{j}", "index": u})
+        else:
+            refs.append({"kind": kind, "mlp_kind": mlpk, "group": "extra",
+                         "key": f"x{i - n_units * cycle}", "index": None})
+    return refs
+
+
 # ---------------------------------------------------------------------------
 # per-layer init / apply
 # ---------------------------------------------------------------------------

@@ -2,6 +2,10 @@ from repro.serving.engine import (
     Request, Result, ServeEngine, ServingWidthPlanner, TrafficClass,
     WidthPlan,
 )
+from repro.serving.width_swap import (
+    SwapEvent, WidthSwapper, serving_templates,
+)
 
 __all__ = ["Request", "Result", "ServeEngine", "ServingWidthPlanner",
-           "TrafficClass", "WidthPlan"]
+           "TrafficClass", "WidthPlan", "SwapEvent", "WidthSwapper",
+           "serving_templates"]

@@ -5,8 +5,8 @@ The decode step is the exact function the dry-run lowers for the
 ``decode_32k`` / ``long_500k`` cells; on the production mesh the KV cache is
 sequence-sharded over the model axis (flash-decode).
 
-Width planning
---------------
+Width planning and live swapping
+--------------------------------
 ``ServingWidthPlanner`` runs the paper's Algorithm 2 per *traffic class*
 (token-volume bucket): the tail-free width config that is optimal for a
 32-token decode batch is not optimal for an 8k-token prefill batch (the
@@ -14,9 +14,22 @@ staircase quantum is the same but the compute/memory crossover moves), so
 the planner pre-computes one width plan per class on the stacked table
 engine — all layers x all candidates in one NumPy sweep, with tables
 persisted through ``repro.core.table_cache`` so a planner restart skips the
-pre-analysis.  ``ServeEngine`` consults the planner at request-batch
-boundaries (``plan_log``), the swap points where a width config change is
-representable without touching in-flight state.
+pre-analysis.
+
+Plans are *applied*, not just recorded: at each request-batch boundary —
+the swap point where a width change is representable without touching
+in-flight state — the engine looks up the traffic class nearest the
+batch's token volume (``plan_log``) and, when a
+``width_swap.WidthSwapper`` is attached, materializes the plan onto the
+live param pytree (sliced MLP hidden dims and attention heads, zero-padded
+within stacked scan groups) before prefilling.  The prefill then builds
+KV caches directly in the plan's shapes.  Each swap is recorded in
+``swap_log`` (plan, wall time, cache hit); a warm swap to an
+already-seen plan is served from the swapper's plan cache with zero new
+array allocations.  Build the planner's templates with
+``width_swap.serving_templates`` so every ``WidthPlan`` carries the
+layer-name -> ``ModuleRef`` mapping (``modules``) the swapper needs to
+address the pytree.
 """
 
 from __future__ import annotations
@@ -29,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.plan_address import ModuleRef
 from repro.models import transformer as tfm
 
 
@@ -59,13 +73,20 @@ class TrafficClass:
 @dataclasses.dataclass
 class WidthPlan:
     """Per-traffic-class output of Algorithm 2: the width config to swap
-    in at a batch boundary, plus its modeled latency."""
+    in at a batch boundary, plus its modeled latency.
+
+    ``modules`` maps each planned layer name to its
+    :class:`repro.core.plan_address.ModuleRef` pytree address — the
+    hook ``width_swap.WidthSwapper`` needs to materialize the plan onto
+    real params.  Plans built from planner templates without a module
+    mapping stay record-only (``None``)."""
 
     traffic: TrafficClass
     widths: dict[str, int]
     latency_s: float
     baseline_latency_s: float
     satisfied: bool
+    modules: "dict[str, ModuleRef] | None" = None
 
     @property
     def latency_reduction(self) -> float:
@@ -87,7 +108,8 @@ class ServingWidthPlanner:
     """
 
     def __init__(self, hw, layers: Sequence, *, cache=None,
-                 tau_frac: float = 0.02):
+                 tau_frac: float = 0.02,
+                 modules: "dict[str, ModuleRef] | None" = None):
         from repro.core.tail_model import WaveQuantizationModel
         from repro.core.tail_optimizer import TailEffectOptimizer
 
@@ -96,6 +118,10 @@ class ServingWidthPlanner:
         self.model = WaveQuantizationModel(hw)
         self.opt = TailEffectOptimizer(self.model, cache=cache)
         self.tau_frac = tau_frac
+        # name -> pytree address; stamped on every WidthPlan so a
+        # WidthSwapper can materialize it (width_swap.serving_templates
+        # builds layers and modules as a matched pair).
+        self.modules = modules
         self.plans: dict[str, WidthPlan] = {}
 
     def _retokened(self, tokens: int) -> list:
@@ -125,12 +151,18 @@ class ServingWidthPlanner:
                 widths=res.new_widths,
                 latency_s=res.latency_new_s,
                 baseline_latency_s=res.latency_old_s,
-                satisfied=res.satisfied)
+                satisfied=res.satisfied,
+                modules=self.modules)
         return self.plans
 
     def select(self, tokens: int) -> WidthPlan:
         """The planned class nearest (log-scale) to a batch's token
-        volume — the boundary-time lookup ``ServeEngine`` performs."""
+        volume — the boundary-time lookup ``ServeEngine`` performs.
+
+        ``tokens`` is clamped to >= 1 (an empty batch selects the
+        smallest class); an exact log-distance tie resolves to the class
+        planned first (``min`` is stable over insertion order), so the
+        boundary lookup is deterministic."""
         if not self.plans:
             raise ValueError("no plans yet: call plan() first")
         best = min(
@@ -146,17 +178,23 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512,
                  batch_slots: int = 4, rng_seed: int = 0,
-                 planner: "ServingWidthPlanner | None" = None):
+                 planner: "ServingWidthPlanner | None" = None,
+                 swapper=None):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.slots = batch_slots
         self.rng = jax.random.PRNGKey(rng_seed)
         # Width planning: at each batch boundary the engine looks up the
-        # traffic class nearest the batch's token volume and records the
-        # chosen plan (the representable swap point for a width change).
+        # traffic class nearest the batch's token volume (plan_log) and,
+        # with a width_swap.WidthSwapper attached, swaps the plan onto
+        # the live params before prefilling (swap_log).  Each distinct
+        # plan's param shapes get their own jit specialization; the
+        # swapper's plan cache makes repeat boundaries allocation-free.
         self.planner = planner
+        self.swapper = swapper
         self.plan_log: List[WidthPlan] = []
+        self.swap_log: List = []
 
         self._decode = jax.jit(
             lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
@@ -174,14 +212,26 @@ class ServeEngine:
         cfg = self.cfg
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
+        params = self.params
         if self.planner is not None:
-            self.plan_log.append(self.planner.select(b * plen))
+            plan = self.planner.select(b * plen)
+            self.plan_log.append(plan)
+            if self.swapper is not None:
+                # The actual swap: materialize the plan onto the live
+                # params (cached per realized width assignment).  The
+                # prefill below then builds KV caches in the plan's
+                # shapes, so no in-flight state is ever re-shaped.
+                # A plan without a module mapping raises here (build
+                # templates via width_swap.serving_templates) rather
+                # than silently serving full-width weights.
+                params, event = self.swapper.apply(plan)
+                self.swap_log.append(event)
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
         toks_j = jnp.asarray(toks)
 
-        logits, states, _ = self._prefill(self.params, toks_j)
+        logits, states, _ = self._prefill(params, toks_j)
         states = self._ensure_states(states, b, plen)
 
         max_new = max(r.max_new_tokens for r in reqs)
@@ -201,7 +251,7 @@ class ServeEngine:
         track_eos = any(r.eos_id >= 0 for r in reqs)
         for t in range(max_new - 1):
             pos = jnp.asarray(plen + t, jnp.int32)
-            logits, states = self._decode(self.params, cur, pos, states)
+            logits, states = self._decode(params, cur, pos, states)
             logits = logits[:, :cfg.vocab_size]
             if any_temp:
                 self.rng, sub = jax.random.split(self.rng)

@@ -99,6 +99,114 @@ def test_planner_consulted_at_batch_boundaries(engine):
         assert plan.traffic.name == "decode"   # 4*8=32 tokens -> decode
 
 
+def _planner_with_swap(cfg, tokens_classes=((("decode", 64),
+                                             ("prefill", 4096)))):
+    """Planner whose templates/modules address the engine's own model."""
+    from repro.core import TPU_V5E
+    from repro.serving import (ServingWidthPlanner, TrafficClass,
+                               serving_templates)
+
+    templates, modules = serving_templates(cfg, TPU_V5E, tokens=256,
+                                           sites=("mlp",))
+    planner = ServingWidthPlanner(TPU_V5E, templates, modules=modules)
+    planner.plan([TrafficClass(n, t) for n, t in tokens_classes])
+    return planner
+
+
+def test_swap_applied_at_batch_boundaries(engine):
+    """With a swapper attached the engine actually materializes the
+    selected plan per batch: plan_log and swap_log stay 1:1 across a
+    multi-batch generate, and the repeat boundary is a cache hit."""
+    from repro.serving import WidthSwapper
+
+    eng, cfg = engine
+    planner = _planner_with_swap(cfg)
+    eng.planner = planner
+    eng.swapper = WidthSwapper(eng.params, cfg)
+    eng.plan_log.clear()
+    eng.swap_log.clear()
+    try:
+        rng = np.random.default_rng(6)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=(8,))
+                        .astype(np.int32), max_new_tokens=2)
+                for _ in range(6)]   # > batch_slots=4 -> two batches
+        out = eng.generate(reqs)
+    finally:
+        eng.planner = None
+        eng.swapper = None
+    assert len(out) == 6
+    assert all((r.tokens < cfg.vocab_size).all() for r in out)
+    assert len(eng.plan_log) == len(eng.swap_log) == 2
+    for plan, ev in zip(eng.plan_log, eng.swap_log):
+        assert ev.plan_name == plan.traffic.name
+    # same traffic class both batches: the second swap is served from
+    # the plan cache (zero new array allocations)
+    assert not eng.swap_log[0].cache_hit
+    assert eng.swap_log[1].cache_hit
+    assert eng.swap_log[0].key == eng.swap_log[1].key
+
+
+def test_full_width_plan_keeps_outputs_bit_identical(engine):
+    """A swap to the full-width plan uses the canonical params object,
+    so outputs match a planner-less engine exactly."""
+    from repro.serving import (ServingWidthPlanner, TrafficClass,
+                               WidthPlan, WidthSwapper, serving_templates)
+    from repro.core import TPU_V5E
+
+    eng, cfg = engine
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    base = eng.generate([Request(prompt=prompt, max_new_tokens=6)])[0]
+
+    _, modules = serving_templates(cfg, TPU_V5E, sites=("mlp",))
+    planner = ServingWidthPlanner(TPU_V5E, [], modules=modules)
+    planner.plans["full"] = WidthPlan(
+        traffic=TrafficClass("full", 64), widths={}, latency_s=1.0,
+        baseline_latency_s=1.0, satisfied=True, modules=modules)
+    eng.planner = planner
+    eng.swapper = WidthSwapper(eng.params, cfg)
+    try:
+        swapped = eng.generate([Request(prompt=prompt,
+                                        max_new_tokens=6)])[0]
+    finally:
+        eng.planner = None
+        eng.swapper = None
+    np.testing.assert_array_equal(base.tokens, swapped.tokens)
+    assert eng.swap_log and eng.swap_log[-1].realized
+
+
+def test_narrowed_plan_serves_on_sliced_params(engine):
+    """A genuinely narrowed plan reaches the hardware: the engine
+    prefills and decodes on the sliced pytree (new jit specialization)
+    and still produces valid tokens."""
+    from repro.serving import (ServingWidthPlanner, TrafficClass,
+                               WidthPlan, WidthSwapper, serving_templates)
+    from repro.core import TPU_V5E
+
+    eng, cfg = engine
+    _, modules = serving_templates(cfg, TPU_V5E, sites=("mlp",))
+    narrow = {name: cfg.d_ff // 2 for name in modules}
+    planner = ServingWidthPlanner(TPU_V5E, [], modules=modules)
+    planner.plans["narrow"] = WidthPlan(
+        traffic=TrafficClass("narrow", 64), widths=narrow, latency_s=1.0,
+        baseline_latency_s=2.0, satisfied=True, modules=modules)
+    eng.planner = planner
+    eng.swapper = WidthSwapper(eng.params, cfg)
+    eng.swap_log.clear()
+    try:
+        rng = np.random.default_rng(8)
+        prompt = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+        out = eng.generate([Request(prompt=prompt, max_new_tokens=4)])[0]
+    finally:
+        eng.planner = None
+        eng.swapper = None
+    assert len(out.tokens) == 4
+    assert (out.tokens < cfg.vocab_size).all()
+    realized = dict(eng.swap_log[-1].realized)
+    for name in narrow:
+        assert realized[name] == cfg.d_ff // 2
+
+
 def test_mixed_temperature_batch(engine):
     """Greedy slots in a mixed greedy/sampled batch must match a pure
     greedy run (the hoisted use_t/temp arrays select per slot)."""

@@ -244,3 +244,90 @@ class TestWarmOptimizer:
         plain = TailEffectOptimizer(WaveQuantizationModel(HW))
         assert res.new_widths == plain.optimize_latency(
             layers, tau=1e9, delta=0.95).new_widths
+
+
+class TestEviction:
+    """max_bytes size cap with least-recently-used eviction: long-lived
+    NAS sweeps must not accumulate stale bundles without bound."""
+
+    def _put(self, cache, i, n=64):
+        layer = LayerShape("l", tokens=64 * (i + 1), d_in=64, width=100)
+        widths = np.arange(1, n + 1, dtype=np.int64)
+        cache.put(HW, layer, widths,
+                  {"latency_s": np.full(n, float(i))})
+        return layer, widths
+
+    def _age(self, cache, seconds):
+        import os
+        import time
+        now = time.time()
+        for p in cache.root.glob("??/*.npz"):
+            os.utime(p, (now - seconds, now - seconds))
+
+    def test_cap_evicts_oldest_entry(self, tmp_path):
+        cache = ProfileTableCache(tmp_path)      # no cap while filling
+        la, wa = self._put(cache, 0)
+        entry_bytes = cache.size_bytes()
+        lb, wb = self._put(cache, 1)
+        self._age(cache, 100)
+
+        capped = ProfileTableCache(tmp_path,
+                                   max_bytes=int(entry_bytes * 2.5))
+        lc, wc = self._put(capped, 2)            # third entry bursts the cap
+        assert capped.stats.evictions >= 1
+        assert capped.get(HW, la, wa) is None    # oldest gone
+        assert capped.get(HW, lc, wc) is not None
+        assert capped.size_bytes() <= int(entry_bytes * 2.5)
+
+    def test_read_hit_refreshes_lru_order(self, tmp_path):
+        cache = ProfileTableCache(tmp_path)
+        la, wa = self._put(cache, 0)
+        entry_bytes = cache.size_bytes()
+        lb, wb = self._put(cache, 1)
+        self._age(cache, 100)
+
+        capped = ProfileTableCache(tmp_path,
+                                   max_bytes=int(entry_bytes * 2.5))
+        assert capped.get(HW, la, wa) is not None   # touch A: now newest
+        self._put(capped, 2)
+        assert capped.get(HW, la, wa) is not None   # A survived the cap
+        assert capped.get(HW, lb, wb) is None       # B was the LRU victim
+
+    def test_just_written_entry_always_survives(self, tmp_path):
+        """Even a cap smaller than one entry keeps the fresh write — a
+        cache that evicts its own write would thrash at 100%."""
+        cache = ProfileTableCache(tmp_path, max_bytes=1)
+        la, wa = self._put(cache, 0)
+        lb, wb = self._put(cache, 1)
+        assert cache.get(HW, lb, wb) is not None
+        assert cache.get(HW, la, wa) is None
+        assert cache.stats.evictions == 1
+
+    def test_no_cap_never_evicts(self, tmp_path):
+        cache = ProfileTableCache(tmp_path)
+        pairs = [self._put(cache, i) for i in range(6)]
+        assert cache.stats.evictions == 0
+        for layer, widths in pairs:
+            assert cache.get(HW, layer, widths) is not None
+
+    def test_stack_bundles_respect_cap(self, tmp_path):
+        layers = [LayerShape(f"s{i}", tokens=64, d_in=64, width=100)
+                  for i in range(3)]
+        w2d = np.arange(12, dtype=np.int64).reshape(3, 4)
+        counts = np.full(3, 4, dtype=np.int64)
+        lat = np.ones((3, 4))
+        probe = ProfileTableCache(tmp_path)
+        probe.put_stack(HW, layers, w2d, counts, lat)
+        bundle_bytes = probe.size_bytes()
+        probe.clear()
+
+        cache = ProfileTableCache(tmp_path,
+                                  max_bytes=int(bundle_bytes * 1.5))
+        cache.put_stack(HW, layers, w2d, counts, lat)
+        self._age(cache, 100)
+        other = [LayerShape(f"t{i}", tokens=128, d_in=64, width=100)
+                 for i in range(3)]
+        cache.put_stack(HW, other, w2d, counts, lat)
+        assert cache.stats.evictions == 1
+        assert cache.get_stack(HW, layers, w2d, counts) is None
+        assert cache.get_stack(HW, other, w2d, counts) is not None

@@ -2,12 +2,15 @@
 table engine, persistent across restarts via the profile-table cache."""
 
 import numpy as np
+import pytest
 
 from repro.core import (
-    LayerShape, ProfileTableCache, TPU_V5E, TunableLayer,
+    LayerShape, ModuleRef, ProfileTableCache, TPU_V5E, TunableLayer,
     analytic_candidates,
 )
-from repro.serving import ServingWidthPlanner, TrafficClass
+from repro.serving import (
+    ServingWidthPlanner, TrafficClass, WidthPlan,
+)
 
 HW = TPU_V5E
 
@@ -59,12 +62,8 @@ class TestPlanner:
 
     def test_select_before_plan_raises(self):
         planner = ServingWidthPlanner(HW, make_templates())
-        try:
+        with pytest.raises(ValueError, match="no plans"):
             planner.select(100)
-        except ValueError:
-            pass
-        else:
-            raise AssertionError("expected ValueError")
 
     def test_retokened_classes_drop_measured_profiles(self):
         """A measured profile is only valid at its profiled token count:
@@ -107,3 +106,55 @@ class TestPlanner:
         assert warm.model.eval_calls == 0
         assert {k: p.widths for k, p in warm_plans.items()} \
             == {k: p.widths for k, p in cold_plans.items()}
+
+
+def _dummy_plan(name, tokens, modules=None):
+    return WidthPlan(traffic=TrafficClass(name, tokens), widths={},
+                     latency_s=1.0, baseline_latency_s=1.0,
+                     satisfied=True, modules=modules)
+
+
+class TestSelectEdgeCases:
+    """Boundary-time lookup corner cases: the engine calls select() on
+    every batch, so its behavior at the edges must be pinned."""
+
+    def _planner_with(self, plans):
+        planner = ServingWidthPlanner(HW, [])
+        for p in plans:
+            planner.plans[p.traffic.name] = p
+        return planner
+
+    def test_tokens_zero_selects_smallest_class(self):
+        """An empty/degenerate batch clamps to 1 token and lands on the
+        smallest planned class instead of raising on log(0)."""
+        planner = self._planner_with([_dummy_plan("small", 64),
+                                      _dummy_plan("large", 65536)])
+        assert planner.select(0).traffic.name == "small"
+        assert planner.select(-3).traffic.name == "small"
+
+    def test_log_scale_tie_resolves_to_first_planned(self):
+        """Two classes at the same token volume are an exact
+        log-distance tie; min() is stable, so the first-planned class
+        wins deterministically (insertion order, not name order)."""
+        planner = self._planner_with([_dummy_plan("b", 512),
+                                      _dummy_plan("a", 512)])
+        assert planner.select(512).traffic.name == "b"
+        planner2 = self._planner_with([_dummy_plan("a", 512),
+                                       _dummy_plan("b", 512)])
+        assert planner2.select(512).traffic.name == "a"
+
+    def test_zero_token_class_is_clamped(self):
+        """A (degenerate) tokens=0 traffic class is clamped the same way
+        as the query, not a log(0) crash."""
+        planner = self._planner_with([_dummy_plan("zero", 0),
+                                      _dummy_plan("big", 4096)])
+        assert planner.select(1).traffic.name == "zero"
+
+    def test_plan_stamps_modules_mapping(self):
+        """Plans carry the planner's name->ModuleRef mapping so a
+        WidthSwapper can materialize them."""
+        modules = {"ffn0": ModuleRef(0, "mlp")}
+        planner = ServingWidthPlanner(HW, make_templates(1),
+                                      modules=modules)
+        plans = planner.plan([TrafficClass("decode", 256)])
+        assert plans["decode"].modules is modules

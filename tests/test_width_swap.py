@@ -1,0 +1,317 @@
+"""Live width-swap subsystem: WidthPlans applied to real params.
+
+The equivalence contract: slicing a layer to a planned width must equal
+running the full model with the dropped channels zeroed — channel for
+channel, over random plans (property-tested), for both FFN hidden dims
+and attention heads (MHA and GQA).  Swapping is lossless (the canonical
+tree is retained; the full-width plan returns it bit for bit) and warm
+swaps to an already-seen plan come from the plan cache with zero new
+array allocations (leaf identity, pinned here via ``SwapEvent``).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config, reduced_config
+from repro.core import TPU_V5E, ModuleRef, snap_heads
+from repro.models import (
+    decoder_layer_refs, forward, init_decode_state, init_params,
+)
+from repro.serving import (
+    TrafficClass, WidthPlan, WidthSwapper, serving_templates,
+)
+
+pytestmark = pytest.mark.swap
+
+HW = TPU_V5E
+
+
+def make_cfg(arch="qwen1.5-0.5b", **kw):
+    kw.setdefault("d_model", 32)
+    kw.setdefault("n_layers", 3)
+    kw.setdefault("n_heads", 4)
+    kw.setdefault("d_ff", 48)
+    kw.setdefault("vocab", 64)
+    return reduced_config(get_config(arch), **kw)
+
+
+def make_plan(widths, modules, name="t", tokens=256):
+    return WidthPlan(traffic=TrafficClass(name, tokens), widths=widths,
+                     latency_s=1.0, baseline_latency_s=2.0,
+                     satisfied=True, modules=modules)
+
+
+def fwd(params, cfg, toks):
+    # disable_jit turns the layer scan into a Python loop: no XLA
+    # compile per sliced shape set, which keeps the property test in
+    # the quick tier.
+    with jax.disable_jit():
+        logits, _, _ = forward(params, cfg, tokens=toks, mode="prefill")
+    return np.asarray(logits.astype(jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def mha():
+    cfg = make_cfg()
+    assert cfg.n_kv_heads == cfg.n_heads  # the MHA case
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, modules = serving_templates(cfg, HW, tokens=256,
+                                   sites=("mlp", "attn"))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(1, 6)).astype(np.int32))
+    return cfg, params, modules, toks
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    cfg = make_cfg("deepseek-7b", n_heads=4)
+    if cfg.n_kv_heads == cfg.n_heads:  # force a GQA ratio if needed
+        cfg = dataclasses.replace(cfg, n_kv_heads=cfg.n_heads // 2)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    _, modules = serving_templates(cfg, HW, tokens=256,
+                                   sites=("mlp", "attn"))
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(1, 6)).astype(np.int32))
+    return cfg, params, modules, toks
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property
+# ---------------------------------------------------------------------------
+class TestSlicedEqualsZeroed:
+    """Sliced-params forward == full-params forward with the dropped
+    channels zeroed, for random plans (the tentpole's contract)."""
+
+    def test_fixed_plan(self, mha):
+        """One deterministic mixed plan — the quick sanity anchor for
+        the property below."""
+        cfg, params, modules, toks = mha
+        sw = WidthSwapper(params, cfg)
+        widths = {"mlp0": cfg.d_ff // 3, "mlp2": cfg.d_ff // 2,
+                  "attn0": cfg.head_dim, "attn1": 3 * cfg.head_dim}
+        mlp_w, heads = sw.realize(widths, modules)
+        sliced = sw.materialize(mlp_w, heads)
+        zeroed = sw.materialize(mlp_w, heads, pad_to_full=True)
+        np.testing.assert_allclose(fwd(sliced, cfg, toks),
+                                   fwd(zeroed, cfg, toks),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_random_plans_mha(self, mha, seed):
+        self._check(mha, seed)
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_random_plans_gqa(self, gqa, seed):
+        self._check(gqa, seed)
+
+    def _check(self, fixture, seed):
+        cfg, params, modules, toks = fixture
+        rng = np.random.default_rng(seed)
+        widths = {}
+        for name, ref in modules.items():
+            if rng.random() < 0.3:
+                continue  # unplanned layers keep canonical width
+            if ref.site == "mlp":
+                widths[name] = int(rng.integers(1, cfg.d_ff + 1))
+            else:
+                widths[name] = int(rng.integers(
+                    1, cfg.n_heads * cfg.head_dim + 1))
+        sw = WidthSwapper(params, cfg)
+        mlp_w, heads = sw.realize(widths, modules)
+        sliced = sw.materialize(mlp_w, heads)
+        zeroed = sw.materialize(mlp_w, heads, pad_to_full=True)
+        np.testing.assert_allclose(fwd(sliced, cfg, toks),
+                                   fwd(zeroed, cfg, toks),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_single_unit_stack_and_extra_layers(self):
+        """recurrentgemma's 3-layer cycle at n_layers=4: the stack has
+        ONE unit (leading axis of size 1 — the group type, not the lid
+        count, decides the stacked layout) plus a leftover 'extra'
+        layer; both must slice correctly."""
+        cfg = make_cfg("recurrentgemma-2b", n_layers=4)
+        assert cfg.n_layers % len(cfg.block_pattern) != 0
+        params = init_params(jax.random.PRNGKey(2), cfg)
+        assert "extra" in params["decoder"]
+        _, modules = serving_templates(cfg, HW, sites=("mlp", "attn"))
+        toks = jnp.asarray(np.random.default_rng(2).integers(
+            0, cfg.vocab_size, size=(1, 6)).astype(np.int32))
+        sw = WidthSwapper(params, cfg)
+        widths = {name: (cfg.d_ff // 2 if ref.site == "mlp"
+                         else cfg.head_dim)
+                  for name, ref in modules.items()}
+        mlp_w, heads = sw.realize(widths, modules)
+        sliced = sw.materialize(mlp_w, heads)
+        zeroed = sw.materialize(mlp_w, heads, pad_to_full=True)
+        np.testing.assert_allclose(fwd(sliced, cfg, toks),
+                                   fwd(zeroed, cfg, toks),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_realized_widths_respect_snapping(self, mha):
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        widths = {"attn0": cfg.head_dim + 1, "mlp1": 10**9, "mlp2": -5}
+        mlp_w, heads = sw.realize(widths, modules)
+        assert heads[0] == snap_heads(cfg.head_dim + 1, cfg.head_dim,
+                                      cfg.n_heads, cfg.n_kv_heads)
+        assert mlp_w[1] == cfg.d_ff     # clamped to canonical
+        assert mlp_w[2] == 1            # floor
+
+
+# ---------------------------------------------------------------------------
+# round-trips and the plan cache
+# ---------------------------------------------------------------------------
+class TestSwapRoundTrip:
+    def test_swap_back_bit_for_bit(self, mha):
+        """Down-swap then full-width swap returns the canonical pytree
+        itself: identical leaf objects, hence bit-for-bit."""
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        down = make_plan({"mlp0": cfg.d_ff // 2, "attn1": cfg.head_dim},
+                         modules, "down")
+        narrow, ev = sw.apply(down)
+        assert not ev.cache_hit
+        assert narrow is not params
+        back, _ = sw.apply(make_plan({}, modules, "full"))
+        assert back is params
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+            assert a is b
+
+    def test_warm_swap_is_allocation_free(self, mha):
+        """A second swap to an already-seen plan is a cache hit — the
+        SAME pytree object, zero new array allocations — and swap_log
+        records it."""
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        plan = make_plan({"mlp0": cfg.d_ff // 2}, modules)
+        cold, ev_cold = sw.apply(plan)
+        warm, ev_warm = sw.apply(plan)
+        assert not ev_cold.cache_hit and ev_warm.cache_hit
+        assert warm is cold
+        for a, b in zip(jax.tree.leaves(cold), jax.tree.leaves(warm)):
+            assert a is b
+        # equal realized widths from a *different* plan share the entry
+        again, ev3 = sw.apply(make_plan({"mlp0": cfg.d_ff // 2},
+                                        modules, "other"))
+        assert ev3.cache_hit and again is cold
+
+    def test_plan_cache_is_lru_bounded(self, mha):
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg, max_plans=1)
+        a = make_plan({"mlp0": cfg.d_ff // 2}, modules, "a")
+        b = make_plan({"mlp1": cfg.d_ff // 2}, modules, "b")
+        sw.apply(a)
+        sw.apply(b)                      # evicts a
+        _, ev = sw.apply(a)
+        assert not ev.cache_hit          # a was rebuilt
+
+    def test_plan_without_modules_raises(self, mha):
+        cfg, params, _, _ = mha
+        sw = WidthSwapper(params, cfg)
+        with pytest.raises(ValueError, match="module mapping"):
+            sw.apply(make_plan({"mlp0": 32}, None))
+
+    def test_unknown_name_and_wrong_site_raise(self, mha):
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        with pytest.raises(ValueError, match="no address"):
+            sw.realize({"nope": 8}, modules)
+        with pytest.raises(ValueError, match="decoder layers"):
+            sw.realize({"far": 8}, {"far": ModuleRef(99, "mlp")})
+
+
+# ---------------------------------------------------------------------------
+# templates and addressing
+# ---------------------------------------------------------------------------
+class TestServingTemplates:
+    def test_matched_pair(self, mha):
+        cfg, _, _, _ = mha
+        templates, modules = serving_templates(cfg, HW, tokens=128,
+                                               sites=("mlp", "attn"))
+        assert {t.layer.name for t in templates} == set(modules)
+        for t in templates:
+            ref = modules[t.layer.name]
+            full = cfg.d_ff if ref.site == "mlp" \
+                else cfg.n_heads * cfg.head_dim
+            assert t.layer.width == full
+            assert t.candidates.max() <= full  # slice-only, never wider
+            assert t.candidates.size > 0
+
+    def test_non_dense_layers_skipped(self):
+        cfg = make_cfg("recurrentgemma-2b")   # rglru/rglru/local pattern
+        templates, modules = serving_templates(cfg, HW,
+                                               sites=("mlp", "attn"))
+        kinds = [r["kind"] for r in decoder_layer_refs(cfg)]
+        n_attn = sum(k in ("attn", "local") for k in kinds)
+        assert sum(r.site == "attn" for r in modules.values()) == n_attn
+        assert all(ref.site in ("mlp", "attn")
+                   for ref in modules.values())
+
+    def test_refs_cover_every_layer_in_order(self, mha):
+        cfg, params, _, _ = mha
+        refs = decoder_layer_refs(cfg)
+        assert len(refs) == cfg.n_layers
+        stacked = [r for r in refs if r["group"] == "stack"]
+        assert [r["index"] for r in stacked] == sorted(
+            r["index"] for r in stacked)
+        for r in refs:  # every address resolves into the real pytree
+            group = params["decoder"][r["group"]]
+            assert r["key"] in group
+
+
+# ---------------------------------------------------------------------------
+# KV state re-shaping at the boundary
+# ---------------------------------------------------------------------------
+class TestReshapeStates:
+    def _random_states(self, cfg, b=2, max_len=16, seed=0):
+        states = init_decode_state(cfg, b, max_len)
+        rng = np.random.default_rng(seed)
+        return jax.tree.map(
+            lambda x: jnp.asarray(
+                rng.standard_normal(x.shape).astype(np.float32)
+            ).astype(x.dtype), states)
+
+    def test_shrink_slices_grow_zero_fills(self, mha):
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        full = np.full(cfg.n_layers, cfg.n_heads, np.int64)
+        half = np.maximum(full // 2, 1)
+        states = self._random_states(cfg)
+
+        down = sw.reshape_states(states, full, half)
+        kv = cfg.n_kv_heads // 2
+        for leafname in ("k", "v"):
+            src = states["stack"]["u0"][leafname]
+            dst = down["stack"]["u0"][leafname]
+            assert dst.shape[-2] == kv
+            np.testing.assert_array_equal(np.asarray(dst),
+                                          np.asarray(src[..., :kv, :]))
+        back = sw.reshape_states(down, half, full)
+        for leafname in ("k", "v"):
+            src = states["stack"]["u0"][leafname]
+            dst = back["stack"]["u0"][leafname]
+            assert dst.shape == src.shape
+            np.testing.assert_array_equal(
+                np.asarray(dst[..., :kv, :]), np.asarray(src[..., :kv, :]))
+            assert not np.asarray(dst[..., kv:, :]).any()  # fresh heads
+
+    def test_noop_when_heads_unchanged(self, mha):
+        cfg, params, _, _ = mha
+        sw = WidthSwapper(params, cfg)
+        full = np.full(cfg.n_layers, cfg.n_heads, np.int64)
+        states = self._random_states(cfg)
+        same = sw.reshape_states(states, full, full)
+        for a, b in zip(jax.tree.leaves(same), jax.tree.leaves(states)):
+            assert a is b
+        assert sw.reshape_states(None, full, full) is None
