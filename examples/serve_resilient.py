@@ -1,0 +1,131 @@
+"""Fault-tolerant serving under a 4x burst (the resilience layer).
+
+    PYTHONPATH=src python examples/serve_resilient.py
+
+Builds the misaligned reduced model from serve_batched.py, then puts the
+engine under deliberate abuse on a virtual clock: a 4x token-volume
+burst of deadline-carrying requests, seeded straggler batches, and a
+0.2 injected swap-failure rate.  Shows the whole loop:
+
+  * admission control sheds the requests that would miss anyway
+    (nobody admitted misses a deadline);
+  * the degradation controller downshifts to narrower Algorithm 2
+    widths under the overload signal and walks back to full width when
+    the burst passes;
+  * injected mid-swap failures roll back to the canonical tree
+    (outcome recorded on the SwapEvent) instead of crashing a batch;
+  * the same burst served at full width vs through the ladder shows
+    the p99 win degradation buys.
+
+Every number printed here is deterministic: injectors are seeded and
+time only advances by modeled batch costs.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, reduced_config  # noqa: E402
+from repro.core import TPU_V5E  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving import (  # noqa: E402
+    AdmissionControl, DegradationController, DegradationLadder,
+    ServeEngine, ServingWidthPlanner, TrafficClass, WidthSwapper,
+    serving_templates,
+)
+from repro.serving.chaos import (  # noqa: E402
+    LoadReport, SlowBatchInjector, SwapFailureInjector, VirtualClock,
+    burst_requests, modeled_batch_cost,
+)
+
+SLOTS, CAP = 4, 3
+BURST_N = 4 * SLOTS * CAP       # 4x the sustainable queue
+
+
+def build_engine(cfg, params, planner, ladder, *, degrade):
+    swapper = degrader = eng_planner = None
+    injector = SwapFailureInjector(0.2, seed=1, steps=("begin",))
+    if degrade:
+        eng_planner = planner
+        swapper = WidthSwapper(params, cfg, fault_hook=injector)
+        degrader = DegradationController(
+            ladder, down_threshold=1.0, up_threshold=0.5,
+            down_patience=1, up_patience=2)
+    eng = ServeEngine(
+        params, cfg, max_len=48, batch_slots=SLOTS,
+        planner=eng_planner, swapper=swapper,
+        admission=AdmissionControl(max_queue_batches=CAP,
+                                   target_batch_s=0.25,
+                                   ewma_alpha=0.5, headroom=2.0),
+        degrader=degrader, clock=VirtualClock(),
+        batch_cost_fn=modeled_batch_cost(
+            1e-3, overhead_s=0.01,
+            slow=SlowBatchInjector(0.25, 0.05, seed=11)))
+    return eng, injector
+
+
+def main():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"), d_model=128,
+                         n_layers=2, d_ff=576)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    templates, modules = serving_templates(cfg, TPU_V5E, tokens=96,
+                                           sites=("mlp",))
+    planner = ServingWidthPlanner(TPU_V5E, templates, modules=modules)
+    traffic = [TrafficClass("burst", 96)]
+    planner.plan(traffic)
+    ladder = DegradationLadder.build(planner, traffic, deltas=(0.8, 0.6))
+    for rung in ladder.rungs:
+        widths = sorted({w for p in rung.plans.values()
+                         for w in p.widths.values()}) or ["full"]
+        print(f"ladder level {rung.level}: widths {widths} "
+              f"(modeled -{rung.reduction:.1%})")
+
+    # --- tight deadlines: shed the hopeless, serve the rest on time ---
+    eng, injector = build_engine(cfg, params, planner, ladder,
+                                 degrade=True)
+    burst = burst_requests(cfg.vocab_size, n=BURST_N, prompt_len=16,
+                           max_new_tokens=8, deadline_s=0.6, seed=3)
+    report = LoadReport.from_results(eng.generate(burst))
+    print(f"\n4x burst, 0.6s deadlines: {report.completed} served / "
+          f"{report.shed} shed / {report.deadline_missed} missed "
+          f"(p50 {report.p50_s*1e3:.0f}ms, p99 {report.p99_s*1e3:.0f}ms)")
+    assert report.deadline_missed == 0
+
+    for s in eng.degrader.shift_log:
+        print(f"  shift {s.direction}: level {s.level} at batch "
+              f"{s.batch_index} (signal {s.signal:.2f})")
+    for ev in eng.swap_log:
+        if ev.outcome == "rolled_back":
+            print(f"  swap rolled back: {ev.error} — batch served "
+                  f"full-width, nobody crashed")
+    assert injector.injected >= 1
+
+    # --- the burst passes: trailing light traffic walks back up -------
+    light = burst_requests(cfg.vocab_size, n=2, prompt_len=16,
+                           max_new_tokens=8, seed=4)
+    for _ in range(6):
+        eng.generate(light)
+    print(f"recovered: degradation level {eng.degrader.level} "
+          f"(full width) after the burst")
+    assert eng.degrader.level == 0
+
+    # --- same burst, full width vs the ladder (no shedding) -----------
+    relaxed = burst_requests(cfg.vocab_size, n=BURST_N, prompt_len=16,
+                             max_new_tokens=8, deadline_s=100.0, seed=3)
+    eng_full, _ = build_engine(cfg, params, planner, ladder,
+                               degrade=False)
+    full = LoadReport.from_results(eng_full.generate(relaxed))
+    eng_deg, _ = build_engine(cfg, params, planner, ladder, degrade=True)
+    deg = LoadReport.from_results(eng_deg.generate(relaxed))
+    print(f"same burst, no shedding: p99 full {full.p99_s*1e3:.0f}ms -> "
+          f"degraded {deg.p99_s*1e3:.0f}ms "
+          f"({full.p99_s/deg.p99_s:.2f}x)")
+    assert deg.p99_s < full.p99_s
+    print("OK: shed the hopeless, degrade the rest, recover after")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entrypoint: quick tier, chaos tier, then the perf gate.
+#
+#   bash scripts/ci.sh
+#
+# Exits non-zero on the first failing stage, so the perf gate
+# (benchmarks/run.py --check vs the committed BENCH_tail_optimizer.json)
+# is no longer opt-in.  The compile-heavy slow tier is still covered by
+# the tier-1 command in ROADMAP.md; this script is the fast always-on
+# subset.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== quick tier =="
+python -m pytest -q -m "not slow"
+
+echo "== chaos tier =="
+python -m pytest -q -m chaos
+
+echo "== perf gate =="
+python benchmarks/run.py --check
+
+echo "ci: all stages passed"

@@ -9,7 +9,7 @@ from repro.core.tail_model import (
 )
 from repro.core.candidates import (
     analytic_candidates, profile_candidates, model_profile_candidates,
-    snap_down, snap_up, snap_nearest,
+    realizable_candidates, snap_down, snap_up, snap_nearest,
 )
 from repro.core.tail_optimizer import (
     TailEffectOptimizer, TunableLayer, OptimizationResult, Move,
@@ -27,8 +27,8 @@ __all__ = [
     "get_hardware", "LayerShape", "StairPoint", "StairTable",
     "ModelStairTable", "WaveQuantizationModel",
     "GridWaveModel", "staircase_edges", "ceil_div", "analytic_candidates",
-    "profile_candidates", "model_profile_candidates", "snap_down",
-    "snap_up", "snap_nearest",
+    "profile_candidates", "model_profile_candidates",
+    "realizable_candidates", "snap_down", "snap_up", "snap_nearest",
     "TailEffectOptimizer", "TunableLayer", "OptimizationResult", "Move",
     "discretize_pruning_space", "tunable_from_profile",
     "ProfileTableCache", "hardware_fingerprint", "RooflineReport",

@@ -46,6 +46,45 @@ def analytic_candidates(
     return cands
 
 
+def realizable_candidates(
+    hw: HardwareSpec,
+    layer: LayerShape,
+    *,
+    realize_quantum: int = 1,
+    max_width: int | None = None,
+    min_width: int = 1,
+) -> np.ndarray:
+    """Analytic stair edges snapped DOWN onto the realizable grid.
+
+    The staircase grid (multiples of Q = shard_out * lane) and the grid a
+    swapper can actually materialize disagree at some sites: attention
+    widths are only realizable as whole GQA head groups
+    (``realize_quantum = g * head_dim``), while FFN widths realize at any
+    lane multiple (``realize_quantum = 1`` degenerates to
+    ``analytic_candidates``).  Planning on the staircase grid and
+    re-snapping at swap time silently changes the width — and therefore
+    the latency the plan was ranked by.  Instead, floor each stair edge
+    to the realizable grid: the result is the widest realizable width
+    inside each stair (same wave count, so the modeled latency of the
+    snapped width is the stair's own), and every returned candidate is
+    materializable as-is.
+    """
+    if realize_quantum <= 1:
+        return analytic_candidates(hw, layer, max_width=max_width,
+                                   min_width=min_width)
+    edges = analytic_candidates(hw, layer, max_width=max_width,
+                                min_width=min_width)
+    rq = int(realize_quantum)
+    lo = max(rq, ((min_width + rq - 1) // rq) * rq)
+    snapped = np.unique(edges // rq * rq)
+    snapped = snapped[snapped >= lo]
+    if max_width is not None:
+        snapped = snapped[snapped <= max_width]
+    if snapped.size == 0:  # every edge below one realizable quantum
+        snapped = np.array([lo], dtype=np.int64)
+    return snapped.astype(np.int64)
+
+
 def profile_candidates(
     widths: Sequence[int],
     utilization: Sequence[float],

@@ -22,7 +22,13 @@ Key = sha256 over
 Entries are ``.npz`` files (parallel arrays + a JSON meta record) written
 atomically (tmp + ``os.replace``), sharded into two-hex-char directories.
 On load the meta is re-verified against the live hardware/shape/version —
-a mismatched or truncated entry reads as a miss, never as wrong data.
+a mismatched entry reads as a miss, never as wrong data.  An *unreadable*
+entry (truncated zip, garbage bytes — e.g. a crashed writer on a
+non-atomic filesystem, or disk corruption) is retried once and then
+quarantined: renamed to ``*.bad`` and counted in ``stats.corrupted``, so
+the key misses cleanly from then on (the caller re-sweeps and rewrites)
+and repeated re-sweeps from a corrupt store stay visible in the stats
+instead of masquerading as ordinary misses.
 
 Two granularities share the store: per-layer entries (``get``/``put``,
 fine-grained reuse for shallow models) and whole-stack bundles
@@ -49,6 +55,7 @@ import hashlib
 import json
 import os
 import tempfile
+import zipfile
 from pathlib import Path
 from typing import Mapping, Sequence
 
@@ -67,6 +74,12 @@ _DISABLE_TOKENS = {"", "0", "off", "none", "disabled"}
 
 _STAIR_FIELDS = ("latency_s", "utilization", "throughput", "waves",
                  "flops", "padded_flops")
+
+# Errors an unreadable (truncated / garbage / half-written) npz entry can
+# raise on load.  These quarantine the file; a *verify* mismatch (stale
+# version, different hw/shape) is a legitimate miss and never does.
+_READ_ERRORS = (OSError, ValueError, KeyError, EOFError,
+                zipfile.BadZipFile, json.JSONDecodeError)
 
 
 @functools.lru_cache(maxsize=64)
@@ -114,6 +127,10 @@ class CacheStats:
     misses: int = 0
     writes: int = 0
     evictions: int = 0
+    # entries whose npz could not be read (truncated/garbage file) and
+    # were quarantined to *.bad — distinct from `misses` so repeated
+    # re-sweeps caused by a corrupt store are visible, not silent
+    corrupted: int = 0
 
 
 def _atomic_savez(path: Path, **arrays) -> None:
@@ -175,22 +192,35 @@ class ProfileTableCache:
         """Arrays stored for (hw, shape, widths), or None on miss.
 
         A hit re-verifies the stored meta (version/hw/shape) and width
-        vector; any mismatch or unreadable file is a miss."""
+        vector; a mismatch is a miss.  An *unreadable* entry (truncated
+        or garbage npz) is retried once — transient IO — then
+        quarantined to ``*.bad`` and counted in ``stats.corrupted``, so
+        the caller's re-sweep rewrites a fresh entry instead of
+        re-reading the corrupt one forever."""
         w = np.asarray(widths, dtype=np.int64)
         path = self._path(table_key(hw, layer, w))
-        try:
-            with np.load(path, allow_pickle=False) as z:
-                meta = str(z["__meta__"])
-                stored_w = z["widths"]
-                if meta != _meta(hw, layer) or stored_w.shape != w.shape \
-                        or (stored_w != w).any():
-                    self.stats.misses += 1
-                    return None
-                out = {k: z[k] for k in z.files
-                       if k not in ("__meta__", "widths")}
-        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        if not path.exists():
             self.stats.misses += 1
             return None
+        for attempt in (0, 1):
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    meta = str(z["__meta__"])
+                    stored_w = z["widths"]
+                    if meta != _meta(hw, layer) \
+                            or stored_w.shape != w.shape \
+                            or (stored_w != w).any():
+                        self.stats.misses += 1
+                        return None
+                    out = {k: z[k] for k in z.files
+                           if k not in ("__meta__", "widths")}
+                break
+            except _READ_ERRORS:
+                if attempt == 0 and path.exists():
+                    continue
+                self._quarantine(path)
+                self.stats.misses += 1
+                return None
         self.stats.hits += 1
         self._touch(path)
         return out
@@ -226,20 +256,31 @@ class ProfileTableCache:
     def get_stack(self, hw: HardwareSpec, layers: Sequence[LayerShape],
                   w2d: np.ndarray,
                   counts: np.ndarray) -> np.ndarray | None:
-        """The (L, C) latency matrix for a whole packed stack, or None."""
+        """The (L, C) latency matrix for a whole packed stack, or None.
+
+        Unreadable bundles follow the same retry-then-quarantine path as
+        per-layer entries (``stats.corrupted``, renamed to ``*.bad``)."""
         key = self.stack_key(hw, layers, w2d, counts)
         path = self._path(key)
-        try:
-            with np.load(path, allow_pickle=False) as z:
-                if str(z["__meta__"]) != f"stack:{CACHE_VERSION}" \
-                        or not np.array_equal(z["w2d"], w2d) \
-                        or not np.array_equal(z["counts"], counts):
-                    self.stats.misses += 1
-                    return None
-                lat2d = z["latency_2d"]
-        except (OSError, ValueError, KeyError):
+        if not path.exists():
             self.stats.misses += 1
             return None
+        for attempt in (0, 1):
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    if str(z["__meta__"]) != f"stack:{CACHE_VERSION}" \
+                            or not np.array_equal(z["w2d"], w2d) \
+                            or not np.array_equal(z["counts"], counts):
+                        self.stats.misses += 1
+                        return None
+                    lat2d = z["latency_2d"]
+                break
+            except _READ_ERRORS:
+                if attempt == 0 and path.exists():
+                    continue
+                self._quarantine(path)
+                self.stats.misses += 1
+                return None
         self.stats.hits += 1
         self._touch(path)
         return lat2d
@@ -271,6 +312,34 @@ class ProfileTableCache:
                           **{f: arrays[f] for f in _STAIR_FIELDS})
 
     # ---- maintenance ----------------------------------------------------
+    def _quarantine(self, path: Path) -> bool:
+        """Rename an unreadable entry to ``<name>.bad`` so the next read
+        of the same key is a clean miss (re-sweep + rewrite) instead of
+        another doomed parse.  The sidecar keeps the evidence on disk
+        for postmortems; ``purge_quarantined`` deletes it."""
+        bad = path.with_name(path.name + ".bad")
+        try:
+            os.replace(path, bad)
+        except OSError:
+            return False     # e.g. lost a race with another process
+        self.stats.corrupted += 1
+        return True
+
+    def quarantined(self) -> list[Path]:
+        """Quarantined (``*.npz.bad``) entries currently on disk."""
+        return sorted(self.root.glob("??/*.npz.bad"))
+
+    def purge_quarantined(self) -> int:
+        """Delete quarantined entries; returns the number removed."""
+        removed = 0
+        for p in self.root.glob("??/*.npz.bad"):
+            try:
+                p.unlink()
+                removed += 1
+            except OSError:
+                pass
+        return removed
+
     @staticmethod
     def _touch(path: Path) -> None:
         """Bump an entry's mtime on a read hit: eviction order becomes
@@ -324,7 +393,8 @@ class ProfileTableCache:
         return total
 
     def clear(self) -> int:
-        """Remove every cache entry under root; returns entries removed."""
+        """Remove every cache entry under root (including quarantined
+        ``*.bad`` sidecars); returns live entries removed."""
         removed = 0
         if not self.root.exists():
             return removed
@@ -334,4 +404,5 @@ class ProfileTableCache:
                 removed += 1
             except OSError:
                 pass
+        self.purge_quarantined()
         return removed

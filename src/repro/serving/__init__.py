@@ -1,11 +1,17 @@
 from repro.serving.engine import (
-    Request, Result, ServeEngine, ServingWidthPlanner, TrafficClass,
-    WidthPlan,
+    AdmissionControl, BatchStats, Request, Result, ServeEngine,
+    ServingWidthPlanner, TrafficClass, WidthPlan,
 )
 from repro.serving.width_swap import (
-    SwapEvent, WidthSwapper, serving_templates,
+    SWAP_STEPS, SwapEvent, WidthSwapper, serving_templates,
 )
+from repro.serving.degradation import (
+    DegradationController, DegradationLadder, LadderRung, Shift,
+)
+from repro.serving import chaos
 
-__all__ = ["Request", "Result", "ServeEngine", "ServingWidthPlanner",
-           "TrafficClass", "WidthPlan", "SwapEvent", "WidthSwapper",
-           "serving_templates"]
+__all__ = ["AdmissionControl", "BatchStats", "Request", "Result",
+           "ServeEngine", "ServingWidthPlanner", "TrafficClass",
+           "WidthPlan", "SWAP_STEPS", "SwapEvent", "WidthSwapper",
+           "serving_templates", "DegradationController",
+           "DegradationLadder", "LadderRung", "Shift", "chaos"]

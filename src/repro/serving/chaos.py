@@ -1,0 +1,208 @@
+"""Seeded fault-injection harness for the serving stack.
+
+Resilience claims that are only exercised by production incidents are
+not claims, they are hopes.  This module makes the failure modes that
+create serving tails *injectable, deterministic, and cheap*:
+
+  * :class:`SwapFailureInjector` — installed as a
+    ``WidthSwapper.fault_hook``; raises :class:`InjectedFault` at the
+    named swap checkpoints (``width_swap.SWAP_STEPS``) at a seeded rate,
+    proving ``apply_guarded`` rolls back to the canonical tree.
+  * :class:`SlowBatchInjector` — wraps a batch-cost function; a seeded
+    fraction of batches pay an extra latency (the "one straggler batch"
+    tail generator from the long-tail playbook).
+  * :class:`CacheCorruptor` — flips a seeded fraction of
+    ``ProfileTableCache`` npz entries to garbage on disk, driving the
+    cache's retry-then-quarantine path.
+  * :class:`VirtualClock` + :func:`modeled_batch_cost` — a simulated
+    time base: the engine's deadlines, EWMA and percentiles run on a
+    clock that only advances by *modeled* batch costs (each plan's own
+    predicted latency ratio), so a chaos scenario's shed set, deadline
+    misses and p50/p99 are exactly reproducible from the seed — on any
+    machine, under any load.
+  * :func:`burst_requests` — an open-loop burst of deadline-carrying
+    requests (open-loop because closed-loop load generators coordinate
+    with the victim and hide the tail).
+
+Every injector draws from its own ``numpy`` Generator seeded at
+construction: two harnesses built with the same seeds inject the same
+faults at the same points, which is what lets the chaos tier assert
+exact outcomes (who was shed, which swaps rolled back) rather than
+statistical ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.width_swap import SWAP_STEPS
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure — never raised by real code."""
+
+
+class VirtualClock:
+    """Deterministic time base: callable like ``time.monotonic`` but
+    only advances when told to (the engine advances it by each batch's
+    simulated cost when a ``batch_cost_fn`` is attached)."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += float(dt)
+        return self.now
+
+
+class SwapFailureInjector:
+    """Seeded ``fault_hook`` raising :class:`InjectedFault` mid-swap.
+
+    ``rate`` is the per-swap failure probability; the Bernoulli draw
+    happens once per matching step, so a rate of 1.0 fails every swap at
+    the first matching step and 0.0 never fires.  ``steps`` defaults to
+    the materialize checkpoint (the widest window in a real swap); pass
+    any subset of ``width_swap.SWAP_STEPS`` to move the failure point.
+    """
+
+    def __init__(self, rate: float, *, seed: int = 0,
+                 steps: Sequence[str] = ("materialize",)):
+        for s in steps:
+            if s not in SWAP_STEPS:
+                raise ValueError(f"unknown swap step {s!r}; expected "
+                                 f"a subset of {SWAP_STEPS}")
+        self.rate = float(rate)
+        self.steps = tuple(steps)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # matching-step evaluations
+        self.injected = 0       # faults actually raised
+
+    def __call__(self, step: str) -> None:
+        if step not in self.steps:
+            return
+        self.calls += 1
+        if self.rng.random() < self.rate:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected swap failure #{self.injected} at {step!r}")
+
+
+class SlowBatchInjector:
+    """Seeded straggler batches: wraps a base batch cost, adding
+    ``extra_s`` with probability ``rate`` per batch."""
+
+    def __init__(self, rate: float, extra_s: float, *, seed: int = 0):
+        self.rate = float(rate)
+        self.extra_s = float(extra_s)
+        self.rng = np.random.default_rng(seed)
+        self.injected = 0
+
+    def __call__(self, base_s: float) -> float:
+        if self.rng.random() < self.rate:
+            self.injected += 1
+            return base_s + self.extra_s
+        return base_s
+
+
+def modeled_batch_cost(per_token_s: float, *, overhead_s: float = 0.0,
+                       slow: "SlowBatchInjector | None" = None
+                       ) -> Callable:
+    """A ``ServeEngine.batch_cost_fn`` driven by the plan's own model.
+
+    Cost = ``overhead_s + per_token_s * tokens * ratio`` where ``ratio``
+    is the plan's modeled ``latency_s / baseline_latency_s`` (1.0 for
+    full width / no plan).  This is exactly the counterfactual the
+    paper's tables promise — a narrower plan speeds a batch by its
+    predicted reduction — which makes the degraded-vs-full p99 gap in a
+    chaos run a direct measurement of the ladder's modeled win, free of
+    host noise.  An optional :class:`SlowBatchInjector` composes on top.
+    """
+
+    def cost(plan, tokens: int) -> float:
+        ratio = 1.0
+        if plan is not None and getattr(plan, "baseline_latency_s", 0.0):
+            ratio = plan.latency_s / plan.baseline_latency_s
+        base = overhead_s + per_token_s * float(tokens) * ratio
+        return slow(base) if slow is not None else base
+
+    return cost
+
+
+class CacheCorruptor:
+    """Seeded on-disk corruption of ``ProfileTableCache`` entries.
+
+    ``strike()`` walks the live ``*.npz`` entries in sorted order (so
+    the seed fully determines which files are hit) and, at ``rate``,
+    overwrites each with garbage bytes — the torn-write/bit-rot case the
+    cache's quarantine path exists for.  Returns the corrupted paths.
+    """
+
+    def __init__(self, cache, rate: float = 1.0, *, seed: int = 0):
+        self.cache = cache
+        self.rate = float(rate)
+        self.rng = np.random.default_rng(seed)
+        self.corrupted: List[Path] = []
+
+    def strike(self) -> List[Path]:
+        hit = []
+        for path in sorted(self.cache.root.glob("??/*.npz")):
+            if self.rng.random() >= self.rate:
+                continue
+            garbage = self.rng.integers(0, 256, size=64,
+                                        dtype=np.uint8).tobytes()
+            try:
+                path.write_bytes(b"\x00CHAOS" + garbage)
+            except OSError:
+                continue
+            hit.append(path)
+        self.corrupted.extend(hit)
+        return hit
+
+
+def burst_requests(vocab_size: int, *, n: int, prompt_len: int = 8,
+                   max_new_tokens: int = 4,
+                   deadline_s: Optional[float] = None,
+                   seed: int = 0) -> list:
+    """An open-loop burst: ``n`` requests, all arriving at once (the
+    engine stamps arrival at ``generate`` time), each carrying the same
+    completion deadline.  Prompts are seeded random tokens."""
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, vocab_size, size=(prompt_len,))
+                .astype(np.int32),
+                max_new_tokens=max_new_tokens, deadline_s=deadline_s)
+        for _ in range(n)
+    ]
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """Tail summary of one open-loop run (non-shed request latencies)."""
+
+    completed: int
+    shed: int
+    deadline_missed: int
+    p50_s: float
+    p99_s: float
+
+    @classmethod
+    def from_results(cls, results) -> "LoadReport":
+        lats = np.array([r.latency_s for r in results if not r.shed])
+        if lats.size == 0:
+            return cls(0, len(results), 0, float("nan"), float("nan"))
+        return cls(
+            completed=int(lats.size),
+            shed=sum(r.shed for r in results),
+            deadline_missed=sum(r.deadline_missed for r in results),
+            p50_s=float(np.percentile(lats, 50)),
+            p99_s=float(np.percentile(lats, 99)),
+        )

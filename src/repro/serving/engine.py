@@ -16,6 +16,34 @@ engine — all layers x all candidates in one NumPy sweep, with tables
 persisted through ``repro.core.table_cache`` so a planner restart skips the
 pre-analysis.
 
+Resilience layer
+----------------
+A loaded server's p99 is set by its queue, not its model, so the engine
+degrades instead of queueing without bound:
+
+  * **Deadlines + admission control** — each :class:`Request` may carry
+    a completion budget (``deadline_s``); an attached
+    :class:`AdmissionControl` sheds requests whose projected completion
+    (elapsed queue wait + a batch-latency EWMA with headroom) exceeds
+    the budget, and deadline-less requests beyond a queue-depth cap.
+    Shed requests return immediately (``Result.shed``) — wasting no
+    compute on work that will miss anyway.
+  * **Graceful degradation** — an attached
+    ``degradation.DegradationController`` replaces ``planner.select`` at
+    batch boundaries: under a sustained overload signal (queue depth +
+    batch EWMA, from the admission controller) it downshifts to
+    narrower/faster WidthPlans with hysteresis, and recovers to full
+    width when the burst passes.
+  * **Transactional swaps** — boundary swaps go through
+    ``WidthSwapper.apply_guarded``: any mid-swap failure rolls back to
+    the retained canonical full-width tree and is recorded on the
+    ``SwapEvent`` (``outcome="rolled_back"``), so a failed swap costs
+    one batch of speedup, never a crash.
+  * **Deterministic time** — ``clock`` and ``batch_cost_fn`` let the
+    chaos harness (``serving.chaos``) run the whole loop on a virtual
+    clock advanced by *modeled* batch costs, making shed sets, deadline
+    misses and tail percentiles exactly reproducible from a seed.
+
 Plans are *applied*, not just recorded: at each request-batch boundary —
 the swap point where a width change is representable without touching
 in-flight state — the engine looks up the traffic class nearest the
@@ -35,7 +63,9 @@ address the pytree.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,12 +82,103 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1            # -1: never stop early
     temperature: float = 0.0    # 0 = greedy
+    # Completion budget in seconds from submission; None = best-effort.
+    # Admission control sheds the request when its projected completion
+    # exceeds the budget (see AdmissionControl).
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class Result:
     tokens: np.ndarray
     steps: int
+    shed: bool = False              # rejected by admission control
+    deadline_missed: bool = False   # completed, but past its budget
+    latency_s: float = 0.0          # submission -> completion (engine clock)
+
+
+def _shed_result() -> "Result":
+    return Result(tokens=np.zeros(0, np.int32), steps=0, shed=True)
+
+
+class AdmissionControl:
+    """Deadline-aware admission + load shedding on an overload signal.
+
+    Two inputs form the overload signal (both normalized so 1.0 = at the
+    configured limit):
+
+      * **queue depth** — batches waiting, over ``max_queue_batches``;
+      * **batch latency** — an EWMA of observed batch wall times
+        (``observe`` is fed by the engine after every batch), over
+        ``target_batch_s``.
+
+    ``signal`` is the max of the two: queueing stacks latency near
+    saturation, so depth alone predicts the tail even before the EWMA
+    catches up, and a latency regression (slow batches at low depth)
+    still registers.  Admission is per request at batch-formation time:
+    a deadline-carrying request is shed when its elapsed wait plus
+    ``headroom`` EWMA-predicted batch times exceeds the budget (it
+    would miss anyway — serving it would only push every later request
+    closer to missing too); a deadline-less request is shed only behind
+    a queue deeper than ``max_queue_batches`` at its arrival.
+    """
+
+    def __init__(self, *, max_queue_batches: int = 8,
+                 target_batch_s: Optional[float] = None,
+                 ewma_alpha: float = 0.3, headroom: float = 1.5):
+        self.max_queue_batches = max(int(max_queue_batches), 1)
+        self.target_batch_s = target_batch_s
+        self.ewma_alpha = float(ewma_alpha)
+        self.headroom = float(headroom)
+        self.batch_ewma: Optional[float] = None
+        self.admitted = 0
+        self.shed = 0
+
+    def observe(self, batch_s: float) -> None:
+        """Feed one completed batch's wall time into the EWMA."""
+        if self.batch_ewma is None:
+            self.batch_ewma = float(batch_s)
+        else:
+            self.batch_ewma = (self.ewma_alpha * float(batch_s)
+                               + (1.0 - self.ewma_alpha) * self.batch_ewma)
+
+    def signal(self, queue_batches: int) -> float:
+        """Overload signal: max of queue-depth and batch-EWMA ratios."""
+        depth = queue_batches / self.max_queue_batches
+        lat = 0.0
+        if self.batch_ewma is not None and self.target_batch_s:
+            lat = self.batch_ewma / self.target_batch_s
+        return max(depth, lat)
+
+    def admit(self, request: Request, *, now: float, arrival: float,
+              backlog_batches: int) -> bool:
+        """Admit or shed one request at batch-formation time.
+
+        ``backlog_batches`` is the queue depth (in batches) ahead of the
+        request when it arrived — the arrival-time congestion a real
+        admission gate would see."""
+        if request.deadline_s is not None and self.batch_ewma is not None:
+            projected = (now - arrival) + self.headroom * self.batch_ewma
+            ok = projected <= request.deadline_s
+        else:
+            # no deadline to project against (or cold EWMA): hard cap
+            ok = backlog_batches <= self.max_queue_batches
+        if ok:
+            self.admitted += 1
+        else:
+            self.shed += 1
+        return ok
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchStats:
+    """Per-batch telemetry, appended to ``ServeEngine.batch_log``."""
+
+    tokens: int         # token volume the batch was planned/costed at
+    latency_s: float    # observed (or simulated) batch wall time
+    plan_name: str      # traffic class served, "" without a planner
+    level: int          # degradation level, -1 without a degrader
+    signal: float       # overload signal after this batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +244,25 @@ class ServingWidthPlanner:
         # builds layers and modules as a matched pair).
         self.modules = modules
         self.plans: dict[str, WidthPlan] = {}
+        # Telemetry hook: observed per-class batch latencies, fed by the
+        # engine after every batch (`record`).  This is the measurement
+        # the plans were built to improve — keeping it on the planner is
+        # what lets a future closed loop re-solve plans from measured
+        # tail behavior instead of static traffic classes.
+        self.telemetry: dict[str, List[float]] = {}
+
+    def record(self, class_name: str, latency_s: float) -> None:
+        """Observe one served batch's latency for a traffic class."""
+        self.telemetry.setdefault(class_name, []).append(float(latency_s))
+
+    def observed_percentile(self, class_name: str,
+                            q: float) -> Optional[float]:
+        """q-th percentile of observed batch latencies for a class, or
+        None before any observation."""
+        lats = self.telemetry.get(class_name)
+        if not lats:
+            return None
+        return float(np.percentile(np.asarray(lats), q))
 
     def _retokened(self, tokens: int) -> list:
         out = []
@@ -179,7 +319,10 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512,
                  batch_slots: int = 4, rng_seed: int = 0,
                  planner: "ServingWidthPlanner | None" = None,
-                 swapper=None):
+                 swapper=None, admission: "AdmissionControl | None" = None,
+                 degrader=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 batch_cost_fn=None):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -193,8 +336,25 @@ class ServeEngine:
         # swapper's plan cache makes repeat boundaries allocation-free.
         self.planner = planner
         self.swapper = swapper
+        # Resilience: admission control (deadline shedding + the overload
+        # signal), a degradation controller (width downshift under that
+        # signal; needs the admission controller as its signal source),
+        # and the deterministic-time hooks chaos runs use: `clock` is
+        # any time.monotonic-like callable, and `batch_cost_fn(plan,
+        # tokens)`, when set, replaces measured batch wall time with a
+        # simulated cost (advancing a chaos.VirtualClock if the clock
+        # exposes .advance).
+        if degrader is not None and admission is None:
+            raise ValueError(
+                "a degradation controller needs an AdmissionControl as "
+                "its overload-signal source; pass admission= too")
+        self.admission = admission
+        self.degrader = degrader
+        self.clock = clock
+        self.batch_cost_fn = batch_cost_fn
         self.plan_log: List[WidthPlan] = []
         self.swap_log: List = []
+        self.batch_log: List[BatchStats] = []
 
         self._decode = jax.jit(
             lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
@@ -203,28 +363,95 @@ class ServeEngine:
                                         mode="prefill"))
 
     def generate(self, requests: List[Request]) -> List[Result]:
-        out: List[Result] = []
-        for i in range(0, len(requests), self.slots):
-            out.extend(self._generate_batch(requests[i:i + self.slots]))
-        return out
+        """Serve an open-loop burst: all requests arrive now; batches of
+        ``batch_slots`` are formed in order, with admission control (when
+        attached) shedding requests at batch-formation time."""
+        results: List[Optional[Result]] = [None] * len(requests)
+        arrival = self.clock()
+        queue = deque(enumerate(requests))
+        while queue:
+            batch_idx: List[int] = []
+            batch: List[Request] = []
+            while queue and len(batch) < self.slots:
+                i, r = queue.popleft()
+                if self.admission is not None and not self.admission.admit(
+                        r, now=self.clock(), arrival=arrival,
+                        backlog_batches=i // self.slots):
+                    results[i] = _shed_result()
+                    continue
+                batch_idx.append(i)
+                batch.append(r)
+            if not batch:
+                continue
+            t0 = self.clock()
+            out, plan = self._generate_batch(batch)
+            self._account_batch(plan, batch, t0, queue_len=len(queue))
+            end = self.clock()
+            for i, res in zip(batch_idx, out):
+                res.latency_s = end - arrival
+                d = requests[i].deadline_s
+                res.deadline_missed = d is not None and res.latency_s > d
+                results[i] = res
+        return [r for r in results if r is not None]
 
-    def _generate_batch(self, reqs: List[Request]) -> List[Result]:
+    def _account_batch(self, plan, reqs: List[Request], t0: float,
+                       *, queue_len: int) -> float:
+        """Close out one batch: latency (measured, or simulated through
+        ``batch_cost_fn`` + a virtual clock), EWMA/telemetry feeds, and
+        the degradation controller's overload observation."""
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        tokens = b * (plen + max(r.max_new_tokens for r in reqs))
+        if self.batch_cost_fn is not None:
+            dt = self.batch_cost_fn(plan, tokens)
+            advance = getattr(self.clock, "advance", None)
+            if advance is not None:
+                advance(dt)
+        else:
+            dt = self.clock() - t0
+        if self.admission is not None:
+            self.admission.observe(dt)
+        sig = 0.0
+        if self.admission is not None:
+            qb = (queue_len + self.slots - 1) // self.slots
+            sig = self.admission.signal(qb)
+            if self.degrader is not None:
+                self.degrader.observe(sig)
+        if self.planner is not None and plan is not None:
+            self.planner.record(plan.traffic.name, dt)
+        self.batch_log.append(BatchStats(
+            tokens=tokens, latency_s=dt,
+            plan_name=plan.traffic.name if plan is not None else "",
+            level=self.degrader.level if self.degrader is not None else -1,
+            signal=sig))
+        return dt
+
+    def _generate_batch(self, reqs: List[Request]):
         cfg = self.cfg
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
         params = self.params
-        if self.planner is not None:
+        plan = None
+        if self.degrader is not None:
+            # degradation replaces the static class lookup: the active
+            # ladder rung picks the plan for this token volume
+            plan = self.degrader.select(b * plen)
+        elif self.planner is not None:
             plan = self.planner.select(b * plen)
+        if plan is not None:
             self.plan_log.append(plan)
             if self.swapper is not None:
                 # The actual swap: materialize the plan onto the live
                 # params (cached per realized width assignment).  The
                 # prefill below then builds KV caches in the plan's
                 # shapes, so no in-flight state is ever re-shaped.
-                # A plan without a module mapping raises here (build
-                # templates via width_swap.serving_templates) rather
-                # than silently serving full-width weights.
-                params, event = self.swapper.apply(plan)
+                # Guarded: a mid-swap failure rolls back to the
+                # canonical full-width tree (outcome on the SwapEvent)
+                # instead of dropping the batch.  A plan without a
+                # module mapping still raises (build templates via
+                # width_swap.serving_templates) rather than silently
+                # serving full-width weights.
+                params, event = self.swapper.apply_guarded(plan)
                 self.swap_log.append(event)
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
@@ -277,7 +504,7 @@ class ServeEngine:
             if r.eos_id >= 0 and (row == r.eos_id).any():
                 row = row[: int(np.argmax(row == r.eos_id)) + 1]
             results.append(Result(tokens=row, steps=steps + 1))
-        return results
+        return results, plan
 
     def _ensure_states(self, states, b: int, plen: int):
         """Grow prefill caches to max_len decode capacity."""

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.candidates import analytic_candidates
+from repro.core.candidates import analytic_candidates, realizable_candidates
 from repro.core.plan_address import ModuleRef, plan_key, snap_heads
 from repro.core.tail_model import LayerShape
 from repro.core.tail_optimizer import TunableLayer
@@ -67,8 +67,13 @@ def serving_templates(cfg: ModelConfig, hw, *, tokens: int = 4096,
     dense-FFN layers (width = ``d_ff``), ``"attn"`` for self-attention
     layers (width = ``n_heads * head_dim`` channels).  MoE/recurrent
     layers have no width-swap site and are skipped.  Candidates come
-    from the analytic staircase, capped at the canonical width — a live
-    swap can only *slice* the trained weights, never invent wider ones.
+    from the analytic staircase *on the realizable grid per site* —
+    lane multiples for FFN widths, whole GQA head groups
+    (``g * head_dim`` multiples) for attention — so every planned width
+    is materializable by :class:`WidthSwapper` as-is, with no swap-time
+    re-snap changing the width the plan was ranked by.  All candidates
+    are capped at the canonical width — a live swap can only *slice*
+    the trained weights, never invent wider ones.
     """
     for s in sites:
         if s not in ("mlp", "attn"):
@@ -97,11 +102,13 @@ def serving_templates(cfg: ModelConfig, hw, *, tokens: int = 4096,
             shape = LayerShape(name, tokens=tokens, d_in=d, width=full_w,
                                shard_out=shard_out,
                                flop_multiplier=2.0 + 2.0 / g)
-            cands = analytic_candidates(hw, shape, max_width=full_w,
-                                        min_width=g * cfg.head_dim)
-            cands = cands[cands <= full_w]
-            if cands.size == 0:
-                cands = np.array([full_w], dtype=np.int64)
+            # realizable grid: whole heads in GQA group-size multiples,
+            # so a ladder/planner width never needs a swap-time re-snap
+            cands = realizable_candidates(
+                hw, shape, realize_quantum=g * cfg.head_dim,
+                max_width=full_w, min_width=g * cfg.head_dim)
+            if full_w not in cands:
+                cands = np.append(cands, full_w)
             templates.append(TunableLayer(
                 layer=shape, candidates=cands,
                 # q + o rows per channel, k + v at the GQA ratio
@@ -203,6 +210,13 @@ def _resize_axis(x, axis: int, size: int):
 # ---------------------------------------------------------------------------
 # the swapper
 # ---------------------------------------------------------------------------
+# Named checkpoints inside apply(), in execution order.  A fault_hook
+# installed on the swapper is called with each step name and may raise —
+# the chaos harness (serving.chaos.SwapFailureInjector) uses this to
+# prove apply_guarded() rolls back cleanly from a failure at ANY step.
+SWAP_STEPS = ("begin", "realize", "materialize", "commit", "finish")
+
+
 @dataclasses.dataclass(frozen=True)
 class SwapEvent:
     """One boundary swap, as recorded in ``ServeEngine.swap_log``."""
@@ -212,6 +226,8 @@ class SwapEvent:
     realized: tuple           # ((module name, realized channel width), ...)
     swap_s: float             # wall time of the apply() call
     cache_hit: bool           # True: served from the plan cache, 0 allocs
+    outcome: str = "ok"       # "ok" | "rolled_back" (guarded swap failed)
+    error: str = ""           # repr of the mid-swap exception, if any
 
 
 class WidthSwapper:
@@ -225,13 +241,22 @@ class WidthSwapper:
     classes, so the working set is small by construction.
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, max_plans: int = 8):
+    def __init__(self, params, cfg: ModelConfig, *, max_plans: int = 8,
+                 fault_hook=None):
         self.full_params = params
         self.cfg = cfg
         self.refs = tfm.decoder_layer_refs(cfg)
         self.max_plans = max(int(max_plans), 1)
         self._cache: "OrderedDict[tuple, dict]" = OrderedDict()
         self._group_g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+        # Optional callable(step_name) invoked at every SWAP_STEPS
+        # checkpoint inside apply(); it may raise to simulate a mid-swap
+        # failure (the chaos harness's injection point).
+        self.fault_hook = fault_hook
+
+    def _step(self, name: str) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(name)
 
     # ---- realization ---------------------------------------------------
     def realize(self, widths: Mapping[str, int],
@@ -339,13 +364,20 @@ class WidthSwapper:
     def apply(self, plan) -> tuple:
         """Materialize ``plan`` (a WidthPlan with a module mapping) and
         return ``(params, SwapEvent)``.  The full-width plan returns the
-        canonical tree itself — swap-back is bit-for-bit the original."""
+        canonical tree itself — swap-back is bit-for-bit the original.
+
+        The plan cache is only written *after* materialization completes
+        (the "commit" checkpoint), so a failure at any step leaves no
+        partially built tree behind — the invariant ``apply_guarded``'s
+        rollback relies on."""
         t0 = time.perf_counter()
         if not getattr(plan, "modules", None):
             raise ValueError(
                 "plan has no module mapping; build templates with "
                 "width_swap.serving_templates and pass modules= to "
                 "ServingWidthPlanner")
+        self._step("begin")
+        self._step("realize")
         mlp_w, heads = self.realize(plan.widths, plan.modules)
         key = (tuple(mlp_w.tolist()), tuple(heads.tolist()))
         hit = key in self._cache
@@ -353,20 +385,52 @@ class WidthSwapper:
             params = self._cache[key]
             self._cache.move_to_end(key)
         else:
+            self._step("materialize")
             if (mlp_w == self.cfg.d_ff).all() \
                     and (heads == self.cfg.n_heads).all():
                 params = self.full_params
             else:
                 params = self.materialize(mlp_w, heads)
+            self._step("commit")
             self._cache[key] = params
             while len(self._cache) > self.max_plans:
                 self._cache.popitem(last=False)
+        self._step("finish")
         name = plan.traffic.name if getattr(plan, "traffic", None) else ""
         event = SwapEvent(plan_name=name, key=key,
                           realized=self.realized_widths(mlp_w, heads,
                                                         plan.modules),
                           swap_s=time.perf_counter() - t0, cache_hit=hit)
         return params, event
+
+    def apply_guarded(self, plan) -> tuple:
+        """Transactional :meth:`apply`: any mid-swap exception rolls back
+        to the retained canonical tree instead of propagating.
+
+        Returns ``(params, SwapEvent)`` exactly like ``apply``; on a
+        failure the params are ``full_params`` (the canonical full-width
+        tree, untouched by construction — every materialization builds a
+        NEW tree from it) and the event records ``outcome="rolled_back"``
+        plus the exception.  A plan without a module mapping still
+        raises — that is a caller contract violation, not a runtime
+        fault to degrade through."""
+        t0 = time.perf_counter()
+        if not getattr(plan, "modules", None):
+            raise ValueError(
+                "plan has no module mapping; build templates with "
+                "width_swap.serving_templates and pass modules= to "
+                "ServingWidthPlanner")
+        try:
+            return self.apply(plan)
+        except Exception as e:  # noqa: BLE001 — the guard IS the point
+            name = plan.traffic.name \
+                if getattr(plan, "traffic", None) else ""
+            event = SwapEvent(
+                plan_name=name, key=(), realized=(),
+                swap_s=time.perf_counter() - t0, cache_hit=False,
+                outcome="rolled_back",
+                error=f"{type(e).__name__}: {e}")
+            return self.full_params, event
 
     # ---- KV state re-shaping -------------------------------------------
     def reshape_states(self, states: Optional[dict], heads_from,

@@ -1,0 +1,486 @@
+"""Chaos tier: seeded fault injection against the resilience layer.
+
+Everything here is deterministic — injectors draw from generators seeded
+at construction and scenario time runs on a virtual clock advanced by
+modeled batch costs — so the assertions are exact (who was shed, which
+swaps rolled back, the p99 to the float) rather than statistical.
+Run alone with ``-m chaos``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LayerShape, ProfileTableCache, TPU_V5E, TailEffectOptimizer,
+    TunableLayer, WaveQuantizationModel, analytic_candidates,
+)
+from repro.serving import (
+    AdmissionControl, DegradationController, DegradationLadder, Request,
+    SWAP_STEPS, ServingWidthPlanner, TrafficClass, WidthSwapper,
+    serving_templates,
+)
+from repro.serving.chaos import (
+    CacheCorruptor, InjectedFault, LoadReport, SlowBatchInjector,
+    SwapFailureInjector, VirtualClock, burst_requests, modeled_batch_cost,
+)
+
+pytestmark = pytest.mark.chaos
+
+HW = TPU_V5E
+
+
+# ---------------------------------------------------------------------------
+# injectors: seeded determinism
+# ---------------------------------------------------------------------------
+class TestInjectors:
+    def test_swap_injector_is_seed_deterministic(self):
+        def trace(seed):
+            inj = SwapFailureInjector(0.3, seed=seed, steps=("begin",))
+            out = []
+            for _ in range(64):
+                try:
+                    inj("begin")
+                    out.append(False)
+                except InjectedFault:
+                    out.append(True)
+            return out
+
+        assert trace(7) == trace(7)
+        assert trace(7) != trace(8)      # different seed, different faults
+
+    def test_swap_injector_rates(self):
+        always = SwapFailureInjector(1.0, steps=("materialize",))
+        with pytest.raises(InjectedFault):
+            always("materialize")
+        never = SwapFailureInjector(0.0, steps=("materialize",))
+        for _ in range(32):
+            never("materialize")
+        assert never.injected == 0
+        # non-matching steps are free passes and don't consume draws
+        always("begin")
+        assert always.calls == 1
+
+    def test_swap_injector_rejects_unknown_step(self):
+        with pytest.raises(ValueError, match="unknown swap step"):
+            SwapFailureInjector(1.0, steps=("explode",))
+
+    def test_slow_batch_injector(self):
+        slow = SlowBatchInjector(1.0, 0.25, seed=0)
+        assert slow(0.1) == pytest.approx(0.35)
+        none = SlowBatchInjector(0.0, 0.25, seed=0)
+        assert none(0.1) == pytest.approx(0.1)
+        a = SlowBatchInjector(0.5, 1.0, seed=3)
+        b = SlowBatchInjector(0.5, 1.0, seed=3)
+        assert [a(0.0) for _ in range(32)] == [b(0.0) for _ in range(32)]
+
+    def test_virtual_clock(self):
+        clk = VirtualClock(10.0)
+        assert clk() == 10.0
+        clk.advance(0.5)
+        assert clk() == 10.5
+
+    def test_modeled_batch_cost_uses_plan_ratio(self):
+        from repro.serving import WidthPlan
+
+        cost = modeled_batch_cost(1e-3, overhead_s=0.01)
+        assert cost(None, 100) == pytest.approx(0.11)
+        plan = WidthPlan(traffic=TrafficClass("t", 100), widths={},
+                         latency_s=0.5, baseline_latency_s=1.0,
+                         satisfied=True)
+        assert cost(plan, 100) == pytest.approx(0.01 + 0.1 * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+class TestAdmissionControl:
+    def test_ewma_tracks_batches(self):
+        ac = AdmissionControl(ewma_alpha=0.5)
+        ac.observe(0.1)
+        assert ac.batch_ewma == pytest.approx(0.1)
+        ac.observe(0.3)
+        assert ac.batch_ewma == pytest.approx(0.2)
+
+    def test_cold_start_admits_deadline_requests(self):
+        ac = AdmissionControl(max_queue_batches=2)
+        r = Request(prompt=np.zeros(4, np.int32), deadline_s=0.01)
+        assert ac.admit(r, now=0.0, arrival=0.0, backlog_batches=0)
+
+    def test_deadline_projection_sheds(self):
+        ac = AdmissionControl(headroom=2.0, ewma_alpha=1.0)
+        ac.observe(0.1)
+        r = Request(prompt=np.zeros(4, np.int32), deadline_s=0.5)
+        # elapsed 0.2 + 2*0.1 projected = 0.4 <= 0.5: admit
+        assert ac.admit(r, now=0.2, arrival=0.0, backlog_batches=0)
+        # elapsed 0.4 + 0.2 projected = 0.6 > 0.5: shed
+        assert not ac.admit(r, now=0.4, arrival=0.0, backlog_batches=0)
+        assert ac.admitted == 1 and ac.shed == 1
+
+    def test_queue_cap_sheds_deadline_less(self):
+        ac = AdmissionControl(max_queue_batches=2)
+        r = Request(prompt=np.zeros(4, np.int32))
+        assert ac.admit(r, now=0.0, arrival=0.0, backlog_batches=2)
+        assert not ac.admit(r, now=0.0, arrival=0.0, backlog_batches=3)
+
+    def test_signal_is_max_of_depth_and_latency(self):
+        ac = AdmissionControl(max_queue_batches=4, target_batch_s=0.2)
+        assert ac.signal(2) == pytest.approx(0.5)      # depth only (cold)
+        ac.observe(0.3)                                 # ewma = 0.3
+        assert ac.signal(2) == pytest.approx(1.5)      # latency dominates
+        assert ac.signal(8) == pytest.approx(2.0)      # depth dominates
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder + controller (planner on synthetic templates)
+# ---------------------------------------------------------------------------
+def make_planner(n=4):
+    ref = LayerShape("ref", tokens=4096, d_in=4096, width=26000,
+                     shard_out=16)
+    cands = analytic_candidates(HW, ref, max_width=26000)
+    layers = []
+    for i in range(n):
+        shape = LayerShape(f"ffn{i}", tokens=4096, d_in=4096,
+                           width=2048 * (i % 3 + 2) + 256, shard_out=16)
+        layers.append(TunableLayer(layer=shape, candidates=cands,
+                                   params_per_unit=4096))
+    return ServingWidthPlanner(HW, layers)
+
+
+TRAFFIC = [TrafficClass("decode", 256), TrafficClass("prefill", 65536)]
+
+
+class TestDegradationLadder:
+    def test_rung0_is_full_width_and_rungs_ranked(self):
+        ladder = DegradationLadder.build(make_planner(), TRAFFIC,
+                                         deltas=(0.6, 0.9))
+        assert len(ladder) == 3
+        assert all(p.widths == {} for p in ladder.rung(0).plans.values())
+        reds = [r.reduction for r in ladder.rungs]
+        assert reds == sorted(reds)        # ranked by latency_reduction
+        assert reds[0] == 0.0
+        # every rung plans every traffic class
+        for rung in ladder.rungs:
+            assert set(rung.plans) == {"decode", "prefill"}
+
+    def test_rung_clamps_and_class_lookup(self):
+        ladder = DegradationLadder.build(make_planner(), TRAFFIC,
+                                         deltas=(0.8,))
+        assert ladder.rung(99) is ladder.rungs[-1]
+        assert ladder.rung(-1) is ladder.rungs[0]
+        assert ladder.rung(0).plan_for(100).traffic.name == "decode"
+        assert ladder.rung(0).plan_for(10**6).traffic.name == "prefill"
+
+    def test_empty_inputs_raise(self):
+        with pytest.raises(ValueError, match="traffic"):
+            DegradationLadder.build(make_planner(), [])
+        with pytest.raises(ValueError, match="empty"):
+            DegradationLadder([])
+
+
+class TestDegradationController:
+    def _controller(self, **kw):
+        kw.setdefault("down_patience", 2)
+        kw.setdefault("up_patience", 3)
+        ladder = DegradationLadder.build(make_planner(), TRAFFIC,
+                                         deltas=(0.8, 0.6))
+        return DegradationController(ladder, **kw)
+
+    def test_downshift_needs_sustained_overload(self):
+        ctl = self._controller()
+        assert ctl.observe(1.5) == 0       # one hot batch: no shift
+        assert ctl.observe(1.5) == 1       # second: downshift
+        assert ctl.shift_log[-1].direction == "down"
+
+    def test_dead_band_resets_streaks(self):
+        ctl = self._controller()
+        ctl.observe(1.5)
+        ctl.observe(0.7)                   # dead band: resets the streak
+        assert ctl.observe(1.5) == 0       # needs two hot again
+        assert ctl.observe(1.5) == 1
+
+    def test_recovery_is_slower_than_degradation(self):
+        ctl = self._controller()
+        for _ in range(4):
+            ctl.observe(2.0)
+        assert ctl.level == 2              # floor of the ladder
+        for _ in range(2):
+            assert ctl.observe(0.1) == 2   # not yet: up_patience=3
+        assert ctl.observe(0.1) == 1
+        for _ in range(3):
+            ctl.observe(0.1)
+        assert ctl.level == 0
+        dirs = [s.direction for s in ctl.shift_log]
+        assert dirs == ["down", "down", "up", "up"]
+
+    def test_select_follows_level(self):
+        ctl = self._controller()
+        full = ctl.select(256)
+        assert full.widths == {}
+        ctl.observe(2.0)
+        ctl.observe(2.0)
+        degraded = ctl.select(256)
+        assert degraded.traffic.name == "decode"
+        assert degraded.widths            # a real narrowed plan
+
+    def test_threshold_validation(self):
+        ladder = DegradationLadder.build(make_planner(), TRAFFIC,
+                                         deltas=(0.8,))
+        with pytest.raises(ValueError, match="hysteresis"):
+            DegradationController(ladder, down_threshold=0.5,
+                                  up_threshold=0.5)
+
+
+# ---------------------------------------------------------------------------
+# cache corruption -> quarantine -> recovery
+# ---------------------------------------------------------------------------
+def cache_layers(n=4):
+    out = []
+    for i in range(n):
+        shape = LayerShape(f"l{i}", tokens=4096, d_in=4096,
+                           width=2048 * (i % 4 + 2) + 256, shard_out=16)
+        cands = analytic_candidates(HW, shape,
+                                    max_width=int(shape.width * 1.6))
+        out.append(TunableLayer(layer=shape, candidates=cands,
+                                params_per_unit=4096))
+    return out
+
+
+class TestCacheCorruption:
+    def test_corrupt_read_quarantines_and_recovers(self, tmp_path):
+        layers = cache_layers()
+        seed = TailEffectOptimizer(WaveQuantizationModel(HW),
+                                   cache=ProfileTableCache(tmp_path))
+        res_clean = seed.optimize_latency(layers, tau=1e9, delta=0.95)
+        n_entries = len(list(ProfileTableCache(tmp_path)
+                             .root.glob("??/*.npz")))
+        assert n_entries == len(layers)
+
+        corruptor = CacheCorruptor(ProfileTableCache(tmp_path), rate=1.0,
+                                   seed=0)
+        assert len(corruptor.strike()) == n_entries
+
+        # the poisoned warm run: every read quarantines, the optimizer
+        # falls back to a fresh sweep, and the answer is unchanged
+        model = WaveQuantizationModel(HW)
+        cache = ProfileTableCache(tmp_path)
+        res = TailEffectOptimizer(model, cache=cache).optimize_latency(
+            layers, tau=1e9, delta=0.95)
+        assert res.new_widths == res_clean.new_widths
+        assert model.eval_calls > 0                 # re-swept
+        assert cache.stats.corrupted == n_entries   # visible, not silent
+        assert cache.stats.hits == 0
+        assert len(cache.quarantined()) == n_entries
+
+        # the re-sweep rewrote fresh entries: next run is warm again
+        model2 = WaveQuantizationModel(HW)
+        cache2 = ProfileTableCache(tmp_path)
+        TailEffectOptimizer(model2, cache=cache2).optimize_latency(
+            layers, tau=1e9, delta=0.95)
+        assert model2.eval_calls == 0
+        assert cache2.stats.corrupted == 0
+
+    def test_partial_corruption_spares_clean_entries(self, tmp_path):
+        layers = cache_layers(6)
+        TailEffectOptimizer(
+            WaveQuantizationModel(HW),
+            cache=ProfileTableCache(tmp_path)).optimize_latency(
+                layers, tau=1e9, delta=0.95)
+        hit = CacheCorruptor(ProfileTableCache(tmp_path), rate=0.5,
+                             seed=1).strike()
+        assert 0 < len(hit) < 6
+        cache = ProfileTableCache(tmp_path)
+        TailEffectOptimizer(WaveQuantizationModel(HW),
+                            cache=cache).optimize_latency(
+            layers, tau=1e9, delta=0.95)
+        assert cache.stats.corrupted == len(hit)
+        assert cache.stats.hits == 6 - len(hit)
+
+    def test_quarantine_counts_once_then_plain_miss(self, tmp_path):
+        layer = LayerShape("l", tokens=64, d_in=64, width=100)
+        widths = np.array([128, 256], dtype=np.int64)
+        cache = ProfileTableCache(tmp_path)
+        cache.put(HW, layer, widths, {"latency_s": np.array([1.0, 2.0])})
+        [path] = list(cache.root.glob("??/*.npz"))
+        path.write_bytes(b"garbage")
+
+        assert cache.get(HW, layer, widths) is None
+        assert cache.stats.corrupted == 1
+        assert not path.exists()                     # renamed to *.bad
+        assert cache.quarantined()[0].name == path.name + ".bad"
+        # second read: the key misses cleanly, no second quarantine
+        assert cache.get(HW, layer, widths) is None
+        assert cache.stats.corrupted == 1
+        assert cache.purge_quarantined() == 1
+        assert cache.quarantined() == []
+
+    def test_clear_removes_quarantined(self, tmp_path):
+        layer = LayerShape("l", tokens=64, d_in=64, width=100)
+        widths = np.array([128], dtype=np.int64)
+        cache = ProfileTableCache(tmp_path)
+        cache.put(HW, layer, widths, {"latency_s": np.array([1.0])})
+        [path] = list(cache.root.glob("??/*.npz"))
+        path.write_bytes(b"junk")
+        cache.get(HW, layer, widths)
+        assert cache.quarantined()
+        cache.clear()
+        assert cache.quarantined() == []
+
+    def test_corruptor_is_seed_deterministic(self, tmp_path):
+        layers = cache_layers(6)
+        TailEffectOptimizer(
+            WaveQuantizationModel(HW),
+            cache=ProfileTableCache(tmp_path)).optimize_latency(
+                layers, tau=1e9, delta=0.95)
+        a = CacheCorruptor(ProfileTableCache(tmp_path), rate=0.5, seed=9)
+        b = CacheCorruptor(ProfileTableCache(tmp_path), rate=0.5, seed=9)
+        # plan the strikes without executing twice: same seed, same draw
+        # sequence over the same sorted file list
+        assert [a.rng.random() for _ in range(8)] \
+            == [b.rng.random() for _ in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance scenario: 4x burst + injected swap failures
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestBurstScenario:
+    """The full resilience loop on a real (tiny) model.
+
+    A 4x token-volume burst (12 batches against a 3-batch queue cap)
+    with a 0.2 injected swap-failure rate, on a virtual clock advanced
+    by modeled batch costs plus seeded straggler batches.  Everything
+    asserted here is exact, not statistical.
+    """
+
+    SLOTS = 4
+    CAP = 3
+    BURST_N = 4 * 4 * 3          # 4x the sustainable queue, in requests
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config, reduced_config
+        from repro.models import init_params
+
+        cfg = reduced_config(get_config("qwen1.5-0.5b"), d_model=128,
+                             n_layers=2, d_ff=576)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        templates, modules = serving_templates(cfg, HW, tokens=96,
+                                               sites=("mlp",))
+        planner = ServingWidthPlanner(HW, templates, modules=modules)
+        traffic = [TrafficClass("burst", 96)]
+        planner.plan(traffic)
+        ladder = DegradationLadder.build(planner, traffic,
+                                         deltas=(0.8, 0.6))
+        return cfg, params, planner, ladder
+
+    def _engine(self, setup, *, degrade: bool, fail_rate: float = 0.2):
+        from repro.serving import ServeEngine
+
+        cfg, params, planner, ladder = setup
+        clock = VirtualClock()
+        slow = SlowBatchInjector(0.25, 0.05, seed=11)
+        injector = SwapFailureInjector(fail_rate, seed=1,
+                                       steps=("begin",))
+        admission = AdmissionControl(
+            max_queue_batches=self.CAP, target_batch_s=0.25,
+            ewma_alpha=0.5, headroom=2.0)
+        degrader = swapper = eng_planner = None
+        if degrade:
+            eng_planner = planner
+            swapper = WidthSwapper(params, cfg, fault_hook=injector)
+            degrader = DegradationController(
+                ladder, down_threshold=1.0, up_threshold=0.5,
+                down_patience=1, up_patience=2)
+        eng = ServeEngine(
+            params, cfg, max_len=48, batch_slots=self.SLOTS,
+            planner=eng_planner, swapper=swapper, admission=admission,
+            degrader=degrader, clock=clock,
+            batch_cost_fn=modeled_batch_cost(1e-3, overhead_s=0.01,
+                                             slow=slow))
+        return eng, injector
+
+    def _burst(self, cfg, deadline_s):
+        return burst_requests(cfg.vocab_size, n=self.BURST_N,
+                              prompt_len=16, max_new_tokens=8,
+                              deadline_s=deadline_s, seed=3)
+
+    def _tight_run(self, setup):
+        cfg = setup[0]
+        eng, injector = self._engine(setup, degrade=True)
+        results = eng.generate(self._burst(cfg, deadline_s=0.6))
+        # trailing light traffic: the burst has passed, the controller
+        # should walk back up to full width
+        light = burst_requests(cfg.vocab_size, n=2, prompt_len=16,
+                               max_new_tokens=8, seed=4)
+        for _ in range(6):
+            eng.generate(light)
+        return eng, injector, results
+
+    def test_tight_deadlines_shed_but_never_miss(self, setup):
+        eng, injector, results = self._tight_run(setup)
+        report = LoadReport.from_results(results)
+        # overloaded: a real fraction of the burst was shed at admission
+        assert report.shed > 0
+        assert report.completed + report.shed == self.BURST_N
+        # the resilience property: every request we accepted, we served
+        # within its budget
+        assert report.deadline_missed == 0
+        assert all(not r.deadline_missed for r in results if not r.shed)
+        assert eng.admission.shed == report.shed
+
+    def test_engine_downshifts_and_recovers(self, setup):
+        eng, injector, _ = self._tight_run(setup)
+        full_w = setup[0].d_ff
+        # downshift happened and reached the params: at least one swap
+        # materialized a narrowed width during the burst
+        downs = [s for s in eng.degrader.shift_log if s.direction == "down"]
+        assert downs, "controller never downshifted under a 4x burst"
+        narrowed = [ev for ev in eng.swap_log
+                    if ev.outcome == "ok" and ev.realized
+                    and min(w for _, w in ev.realized) < full_w]
+        assert narrowed, "no batch was served at a reduced width"
+        # burst passed: recovered to full width
+        assert eng.degrader.level == 0
+        assert eng.batch_log[-1].level == 0
+        ups = [s for s in eng.degrader.shift_log if s.direction == "up"]
+        assert len(ups) == len(downs)
+
+    def test_injected_swap_failures_roll_back(self, setup):
+        eng, injector, results = self._tight_run(setup)
+        assert injector.injected >= 1          # 0.2 rate actually fired
+        rolled = [ev for ev in eng.swap_log if ev.outcome == "rolled_back"]
+        assert len(rolled) == injector.injected
+        for ev in rolled:
+            assert "InjectedFault" in ev.error
+        # rolled-back batches still served (full width), nobody crashed
+        assert all(len(r.tokens) == 8 for r in results if not r.shed)
+
+    def test_scenario_is_deterministic(self, setup):
+        runs = []
+        for _ in range(2):
+            eng, injector, results = self._tight_run(setup)
+            runs.append((
+                [r.shed for r in results],
+                [ev.outcome for ev in eng.swap_log],
+                [s.direction for s in eng.degrader.shift_log],
+                LoadReport.from_results(results),
+            ))
+        assert runs[0] == runs[1]
+
+    def test_degraded_p99_beats_full_width_under_burst(self, setup):
+        cfg = setup[0]
+        # relaxed deadlines: nothing sheds, so both runs complete the
+        # identical 12-batch burst and the p99 gap is pure width policy
+        relaxed = self._burst(cfg, deadline_s=100.0)
+        eng_full, _ = self._engine(setup, degrade=False)
+        full = LoadReport.from_results(eng_full.generate(relaxed))
+        eng_deg, _ = self._engine(setup, degrade=True)
+        deg = LoadReport.from_results(eng_deg.generate(relaxed))
+        assert full.shed == deg.shed == 0
+        assert full.completed == deg.completed == self.BURST_N
+        assert deg.p99_s < full.p99_s
+        assert deg.p50_s <= full.p50_s

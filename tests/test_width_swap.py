@@ -232,6 +232,67 @@ class TestSwapRoundTrip:
 
 
 # ---------------------------------------------------------------------------
+# transactional swaps: rollback from injected failures
+# ---------------------------------------------------------------------------
+class TestGuardedSwap:
+    """Property: a failure injected at EVERY possible swap step leaves
+    the live tree bit-for-bit the canonical tree, and a subsequent clean
+    swap succeeds (the tentpole's transactional contract)."""
+
+    def test_rollback_at_every_step(self, mha):
+        from repro.serving import SWAP_STEPS
+        from repro.serving.chaos import SwapFailureInjector
+
+        cfg, params, modules, toks = mha
+        pristine = [np.asarray(leaf).copy()
+                    for leaf in jax.tree.leaves(params)]
+        widths = {"mlp0": cfg.d_ff // 2, "attn1": cfg.head_dim}
+        for step in SWAP_STEPS:
+            sw = WidthSwapper(
+                params, cfg,
+                fault_hook=SwapFailureInjector(1.0, steps=(step,)))
+            live, ev = sw.apply_guarded(make_plan(widths, modules))
+            assert ev.outcome == "rolled_back", step
+            assert "InjectedFault" in ev.error
+            # the live tree IS the canonical object, and the canonical
+            # tree is bit-for-bit untouched by the failed swap
+            assert live is params
+            for leaf, ref in zip(jax.tree.leaves(live), pristine):
+                np.testing.assert_array_equal(np.asarray(leaf), ref)
+            # the plan cache never holds a partially built tree: entries
+            # are only written after materialization completes
+            if step in ("begin", "realize", "materialize", "commit"):
+                assert not sw._cache, step
+            # a subsequent clean swap succeeds and realizes the widths
+            sw.fault_hook = None
+            ok_params, ok_ev = sw.apply_guarded(make_plan(widths, modules))
+            assert ok_ev.outcome == "ok", step
+            realized = dict(ok_ev.realized)
+            assert realized["mlp0"] == cfg.d_ff // 2
+            assert ok_params is not params
+
+    def test_guard_is_transparent_on_success(self, mha):
+        """Without faults, apply_guarded == apply (same tree objects,
+        same event contents, cache behavior preserved)."""
+        cfg, params, modules, _ = mha
+        sw = WidthSwapper(params, cfg)
+        plan = make_plan({"mlp0": cfg.d_ff // 2}, modules)
+        cold, ev_cold = sw.apply_guarded(plan)
+        warm, ev_warm = sw.apply_guarded(plan)
+        assert ev_cold.outcome == ev_warm.outcome == "ok"
+        assert not ev_cold.cache_hit and ev_warm.cache_hit
+        assert warm is cold
+
+    def test_guard_still_raises_on_missing_modules(self, mha):
+        """A plan without a module mapping is a caller bug, not a
+        runtime fault: the guard must not swallow it."""
+        cfg, params, _, _ = mha
+        sw = WidthSwapper(params, cfg)
+        with pytest.raises(ValueError, match="module mapping"):
+            sw.apply_guarded(make_plan({"mlp0": 32}, None))
+
+
+# ---------------------------------------------------------------------------
 # templates and addressing
 # ---------------------------------------------------------------------------
 class TestServingTemplates:
@@ -247,6 +308,28 @@ class TestServingTemplates:
             assert t.layer.width == full
             assert t.candidates.max() <= full  # slice-only, never wider
             assert t.candidates.size > 0
+
+    @pytest.mark.parametrize("fixture_name", ["mha", "gqa"])
+    def test_attn_candidates_on_realizable_grid(self, fixture_name,
+                                                request):
+        """Attention candidates are generated on the realizable grid
+        (whole GQA head groups): snap_heads is the identity on every
+        candidate, so ladder/planner widths materialize as planned with
+        no swap-time re-snap (the ROADMAP head-quantum mismatch)."""
+        cfg, _, _, _ = request.getfixturevalue(fixture_name)
+        templates, modules = serving_templates(cfg, HW, tokens=128,
+                                               sites=("mlp", "attn"))
+        g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+        q = g * cfg.head_dim
+        for t in templates:
+            if modules[t.layer.name].site != "attn":
+                continue
+            assert (t.candidates % q == 0).all()
+            assert t.candidates.max() == cfg.n_heads * cfg.head_dim
+            for c in t.candidates.tolist():
+                snapped = snap_heads(c, cfg.head_dim, cfg.n_heads,
+                                     cfg.n_kv_heads) * cfg.head_dim
+                assert snapped == c
 
     def test_non_dense_layers_skipped(self):
         cfg = make_cfg("recurrentgemma-2b")   # rglru/rglru/local pattern
