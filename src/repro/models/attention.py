@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import COMPUTE_DTYPE, PARAM_DTYPE, cast, dense_init
 from repro.parallel.sharding import (
     shard, current_mesh, logical_to_pspec, batch_axes,
@@ -233,7 +234,11 @@ def local_attention_prefill(q, k, v, *, window: int, q_offset: int = 0,
 # decode
 # ---------------------------------------------------------------------------
 def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
-    """Single-token attention, replicated cache.  q: (B, H, dh)."""
+    """Single-token attention, replicated cache.  q: (B, H, dh).
+
+    ``cache_len`` is the valid cache length — a scalar (lockstep decode)
+    or a (B,) vector (ragged decode: each slot of a continuous batch at
+    its own position)."""
     b, h, dh = q.shape
     kv = k_cache.shape[2]
     g = h // kv
@@ -243,6 +248,9 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
                    k_cache.astype(COMPUTE_DTYPE),
                    preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(k_cache.shape[1])
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 1:                # per-slot valid lengths
+        cache_len = cache_len[:, None, None, None]
     s = jnp.where(pos[None, None, None, :] < cache_len, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(COMPUTE_DTYPE),
@@ -298,12 +306,11 @@ def flash_decode_sharded(q, k_cache, v_cache, cache_len, mesh: Mesh,
         o = o / jnp.maximum(l_glob, 1e-30)[..., None]
         return o.reshape(b, h, dh).astype(COMPUTE_DTYPE)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, None, None), P(dp, seq_axis, None, None),
                   P(dp, seq_axis, None, None), P()),
         out_specs=P(dp, None, None),
-        check_vma=False,
     )(q, k_cache, v_cache, cache_len)
 
 
@@ -327,9 +334,8 @@ def update_cache_sharded(cache, new, pos, mesh: Optional[Mesh],
             c, n[:, None].astype(c.dtype), (0, i_c, 0, 0))
         return jnp.where(inb, upd, c)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, seq_axis, None, None), P(dp, None, None), P()),
         out_specs=P(dp, seq_axis, None, None),
-        check_vma=False,
     )(cache, new, pos)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import COMPUTE_DTYPE, PARAM_DTYPE, cast, dense_init
 from repro.parallel.sharding import shard, batch_axes
 
@@ -203,13 +204,12 @@ def apply_moe_capacity(p: dict, x: jax.Array, k: int, capacity_factor: float,
                                           e_lo, e_local, n_experts, cap)
             return jax.lax.psum(y, ep_axis)
 
-        y = jax.shard_map(
+        y = shard_map(
             f, mesh=mesh,
             in_specs=(P(dp, None), P(dp, None), P(dp, None),
                       P(ep_axis, fsdp, None), P(ep_axis, fsdp, None),
                       P(ep_axis, None, fsdp)),
             out_specs=P(dp, None),
-            check_vma=False,
         )(x_flat, ids_f, gates_f, w["w_gate"], w["w_up"], w["w_down"])
         y = y.reshape(b, s, d)
 

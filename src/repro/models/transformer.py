@@ -167,11 +167,35 @@ def _self_attention(p, x, cfg: ModelConfig, kind: str, mode: str,
     """Self-attention for train / prefill / decode.  Returns (y, cache)."""
     b = x.shape[0]
     if mode == "decode":
+        # Ragged decode (continuous batching): `pos` may be a (B,) vector
+        # of per-slot write positions — each slot of the batch sits at its
+        # own sequence offset, so cache writes scatter per row and the
+        # attention mask uses per-row valid lengths.
+        ragged = jnp.ndim(pos) == 1
         q, k, v = attn_lib.qkv_proj(p, x)                 # (B,1,H,dh)
         rp = positions if positions is not None else (
-            _default_positions(cfg, b, 1, pos))
+            _default_positions(cfg, b, 1, pos[:, None] if ragged else pos))
         q, k = _rope(cfg, q, k, rp)
         mesh = current_mesh()
+        if ragged:
+            b_idx = jnp.arange(b)
+            if kind == "local":
+                w = cfg.window
+                slot = pos % w
+                kc = cache["k"].at[b_idx, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[b_idx, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                valid = jnp.minimum(pos + 1, w)
+            else:
+                kc = cache["k"].at[b_idx, pos].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                vc = cache["v"].at[b_idx, pos].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                valid = pos + 1
+            o = attn_lib.decode_attention(q[:, 0], kc, vc, valid)
+            y = attn_lib.out_proj(p, o[:, None])
+            return y, {"k": kc, "v": vc}
         if kind == "local":
             w = cfg.window
             slot = pos % w

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.parallel.compression import (
     compressed_psum_tree, zero_error_state,
 )
@@ -114,8 +115,7 @@ def outer_step(pod_params, outer, dcfg: DilocoConfig, mesh: Mesh):
         jax.tree.map(lambda _: P(), outer["momentum"]),
         jax.tree.map(lambda _: P(), outer["err"]),
     )
-    new_pp, new_anchor, mom, err = jax.shard_map(
+    new_pp, new_anchor, mom, err = shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )(pod_params, anchor, outer["momentum"], outer["err"])
     return new_pp, {"anchor": new_anchor, "momentum": mom, "err": err}

@@ -8,10 +8,14 @@ from repro.serving.width_swap import (
 from repro.serving.degradation import (
     DegradationController, DegradationLadder, LadderRung, Shift,
 )
+from repro.serving.continuous import (
+    Arrival, BoundaryEvent, ContinuousServeEngine, Ledger,
+)
 from repro.serving import chaos
 
 __all__ = ["AdmissionControl", "BatchStats", "Request", "Result",
            "ServeEngine", "ServingWidthPlanner", "TrafficClass",
            "WidthPlan", "SWAP_STEPS", "SwapEvent", "WidthSwapper",
            "serving_templates", "DegradationController",
-           "DegradationLadder", "LadderRung", "Shift", "chaos"]
+           "DegradationLadder", "LadderRung", "Shift", "Arrival",
+           "BoundaryEvent", "ContinuousServeEngine", "Ledger", "chaos"]

@@ -8,6 +8,10 @@ create serving tails *injectable, deterministic, and cheap*:
     ``WidthSwapper.fault_hook``; raises :class:`InjectedFault` at the
     named swap checkpoints (``width_swap.SWAP_STEPS``) at a seeded rate,
     proving ``apply_guarded`` rolls back to the canonical tree.
+  * :class:`ReshapeFailureInjector` — installed as a
+    ``WidthSwapper.reshape_fault_hook``; faults ``reshape_states``
+    mid-boundary (params committed, KV caches mid-rewrite), the window
+    where the continuous engine's transaction recovery is proven.
   * :class:`SlowBatchInjector` — wraps a batch-cost function; a seeded
     fraction of batches pay an extra latency (the "one straggler batch"
     tail generator from the long-tail playbook).
@@ -23,6 +27,10 @@ create serving tails *injectable, deterministic, and cheap*:
   * :func:`burst_requests` — an open-loop burst of deadline-carrying
     requests (open-loop because closed-loop load generators coordinate
     with the victim and hide the tail).
+  * :class:`TrafficLoad` + :func:`open_loop_arrivals` — seeded Poisson
+    arrival schedules per traffic class (with optional spikes) for the
+    continuous engine, reported per class by :class:`TailReport`
+    (p50/p99/p99.9) via :func:`class_tail_reports`.
 
 Every injector draws from its own ``numpy`` Generator seeded at
 construction: two harnesses built with the same seeds inject the same
@@ -92,6 +100,34 @@ class SwapFailureInjector:
             self.injected += 1
             raise InjectedFault(
                 f"injected swap failure #{self.injected} at {step!r}")
+
+
+class ReshapeFailureInjector:
+    """Seeded ``WidthSwapper.reshape_fault_hook`` — faults the *state*
+    half of a boundary crossing.
+
+    ``SwapFailureInjector`` breaks the parameter swap, which
+    ``apply_guarded`` rolls back before any live state is touched.  This
+    injector fires inside ``reshape_states`` instead: the params have
+    already committed, the KV caches are mid-rewrite — the exact window
+    where a naive engine strands its in-flight requests.  The continuous
+    engine treats it as a transaction abort (canonical tree restored,
+    every in-flight request requeued with its tokens intact), which is
+    what the chaos tier proves.
+    """
+
+    def __init__(self, rate: float, *, seed: int = 0):
+        self.rate = float(rate)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # reshape attempts evaluated
+        self.injected = 0       # faults actually raised
+
+    def __call__(self) -> None:
+        self.calls += 1
+        if self.rng.random() < self.rate:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected KV-reshape failure #{self.injected}")
 
 
 class SlowBatchInjector:
@@ -182,6 +218,105 @@ def burst_requests(vocab_size: int, *, n: int, prompt_len: int = 8,
                 max_new_tokens=max_new_tokens, deadline_s=deadline_s)
         for _ in range(n)
     ]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficLoad:
+    """One traffic class of an open-loop workload: ``rate_rps`` Poisson
+    arrivals per second for ``duration_s``, each request drawn with this
+    class's shape.  ``burst_at``/``burst_n`` optionally drop an
+    instantaneous burst on top (the 4x-spike scenario)."""
+
+    name: str
+    rate_rps: float
+    duration_s: float
+    prompt_len: int = 8
+    max_new_tokens: int = 8
+    deadline_s: Optional[float] = None
+    burst_at: Optional[float] = None
+    burst_n: int = 0
+
+
+def open_loop_arrivals(loads: Sequence[TrafficLoad], vocab_size: int,
+                       *, seed: int = 0) -> list:
+    """Seeded open-loop arrival schedule across traffic classes.
+
+    Per class, inter-arrival gaps are exponential at ``rate_rps``
+    (Poisson process) over ``duration_s``; an optional burst adds
+    ``burst_n`` simultaneous arrivals at ``burst_at``.  Classes are
+    merged and sorted by time.  Open-loop: arrival times never depend on
+    the server, so a saturated engine sees the queue it would see in
+    production rather than a politely back-pressured one.  The schedule
+    is a pure function of ``seed``.
+    """
+    from repro.serving.continuous import Arrival
+    from repro.serving.engine import Request
+
+    out = []
+    for k, load in enumerate(loads):
+        rng = np.random.default_rng(seed + 7919 * k)
+
+        def req():
+            return Request(
+                prompt=rng.integers(0, vocab_size,
+                                    size=(load.prompt_len,))
+                .astype(np.int32),
+                max_new_tokens=load.max_new_tokens,
+                deadline_s=load.deadline_s)
+
+        t = 0.0
+        if load.rate_rps > 0:
+            while True:
+                t += float(rng.exponential(1.0 / load.rate_rps))
+                if t >= load.duration_s:
+                    break
+                out.append(Arrival(t=t, request=req(), klass=load.name))
+        if load.burst_at is not None:
+            for _ in range(load.burst_n):
+                out.append(Arrival(t=float(load.burst_at), request=req(),
+                                   klass=load.name))
+    out.sort(key=lambda a: a.t)
+    return out
+
+
+@dataclasses.dataclass
+class TailReport:
+    """Latency tail for one traffic class of an open-loop run."""
+
+    name: str
+    completed: int
+    shed: int
+    failed: int
+    recovered: int
+    p50_s: float
+    p99_s: float
+    p999_s: float
+
+    @classmethod
+    def build(cls, name: str, results) -> "TailReport":
+        done = [r for r in results if not r.shed and not r.failed]
+        lats = np.array([r.latency_s for r in done])
+        nan = float("nan")
+        return cls(
+            name=name, completed=len(done),
+            shed=sum(r.shed for r in results),
+            failed=sum(getattr(r, "failed", False) for r in results),
+            recovered=sum(getattr(r, "recovered", False)
+                          for r in results),
+            p50_s=float(np.percentile(lats, 50)) if lats.size else nan,
+            p99_s=float(np.percentile(lats, 99)) if lats.size else nan,
+            p999_s=float(np.percentile(lats, 99.9)) if lats.size else nan,
+        )
+
+
+def class_tail_reports(arrivals, results) -> dict:
+    """Per-class :class:`TailReport` for a run of ``open_loop_arrivals``
+    output through ``ContinuousServeEngine.run`` (results align with
+    arrivals by position)."""
+    by_class: dict = {}
+    for a, r in zip(arrivals, results):
+        by_class.setdefault(a.klass, []).append(r)
+    return {k: TailReport.build(k, rs) for k, rs in by_class.items()}
 
 
 @dataclasses.dataclass

@@ -1,0 +1,669 @@
+"""Continuous-batching serve engine with in-flight fault recovery.
+
+``ServeEngine`` (engine.py) is a *static*-batch engine: it pads requests
+into lockstep batches, prefills each batch from scratch, and the whole
+batch finishes together — so a short request queued behind a long one
+pays the long one's decode tail (head-of-line blocking), and the tested
+``WidthSwapper.reshape_states`` never runs against live state because
+every boundary starts from a fresh prefill.  This module is the step
+from that batch demo toward a loaded server:
+
+  * **Slot-based continuous batching** — the engine owns ``batch_slots``
+    decode slots over one shared KV cache; requests *join in flight*
+    (a one-request prefill written into a free slot at its own
+    position — the ragged-decode path in ``models.transformer`` scatters
+    cache writes per slot) and *leave in flight* the moment they finish,
+    freeing the slot for the next queued request.  No request ever waits
+    for an unrelated request's tail.
+  * **Admission + watchdogs** — joins go through the existing
+    :class:`~repro.serving.engine.AdmissionControl` (deadline projection
+    against an EWMA of per-request service times); once decoding, a
+    per-request watchdog sheds any request that exceeds its deadline
+    *during* decode (partial tokens returned, ``deadline_missed=True``)
+    instead of letting a doomed request occupy a slot.
+  * **Recoverable boundary transactions** — at a width-plan boundary the
+    engine swaps params through ``WidthSwapper.apply_guarded`` and
+    carries every live KV cache across via ``reshape_states`` (exact
+    when the plan shrinks heads).  The crossing is a transaction: if the
+    swap rolls back or the KV reshape faults
+    (``serving.chaos.ReshapeFailureInjector``), the engine restores the
+    canonical tree + fresh state and *requeues* every in-flight request
+    with its already-generated tokens intact — bounded retries
+    (``max_retries``), never a silent drop.  ``Result.retries`` counts
+    requeues and ``Result.recovered`` marks requests that survived one.
+    A boundary that would *grow* KV heads requeues live requests the
+    same way (their history re-prefills at the new width) rather than
+    decoding against zero-history head slots.
+  * **Graceful drain** — :meth:`ContinuousServeEngine.drain` stops
+    admitting, sheds the waiting queue, finishes (or sheds, on budget
+    exhaustion) the in-flight slots, and returns a :class:`Ledger` in
+    which every submitted request is accounted for as
+    finished / shed / failed — the sums are exact by construction.
+  * **Open-loop load** — :class:`Arrival` timestamps requests on the
+    engine clock; ``serving.chaos.open_loop_arrivals`` generates
+    Poisson/burst traffic per class on a ``VirtualClock`` so tail
+    percentiles (p50/p99/p99.9 via ``chaos.TailReport``) are exactly
+    reproducible from a seed.
+
+Determinism contract: with a ``VirtualClock`` + ``batch_cost_fn`` every
+join, shed, boundary crossing, and requeue is a pure function of the
+seeds — the chaos tier asserts exact ledgers, not statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Request, Result, WidthPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One open-loop arrival: a request hitting the server at time ``t``
+    (engine-clock seconds), tagged with its traffic class for per-class
+    tail reporting."""
+
+    t: float
+    request: Request
+    klass: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryEvent:
+    """One width-plan boundary crossing attempt, in ``boundary_log``."""
+
+    step: int                 # engine step index at the crossing
+    plan_name: str            # traffic class of the target plan
+    outcome: str              # "ok" | "swap_rolled_back" |
+    #                           "reshape_failed" | "requeued_grow"
+    requeued: int             # in-flight requests sent back to the queue
+    error: str = ""           # repr of the mid-boundary exception, if any
+
+
+@dataclasses.dataclass(frozen=True)
+class Ledger:
+    """Complete accounting of a serve run: every submitted request ends
+    in exactly one terminal state."""
+
+    submitted: int
+    finished: int
+    shed: int
+    failed: int
+    in_flight: int            # non-terminal (0 after drain())
+    queued: int               # non-terminal (0 after drain())
+
+    @property
+    def accounted(self) -> int:
+        return self.finished + self.shed + self.failed
+
+    @property
+    def complete(self) -> bool:
+        """True when every submitted request reached a terminal state."""
+        return self.accounted == self.submitted \
+            and self.in_flight == 0 and self.queued == 0
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """Engine-internal per-request bookkeeping."""
+
+    rid: int
+    request: Request
+    klass: str
+    arrival_t: float
+    generated: List[int] = dataclasses.field(default_factory=list)
+    retries: int = 0
+    join_t: float = 0.0
+
+
+class ContinuousServeEngine:
+    """Requests join and leave the running decode batch in flight.
+
+    The engine owns one decode-state pytree shaped ``(batch_slots,
+    max_len, ...)`` (``models.transformer.init_decode_state`` layout) and
+    a per-slot position vector; decode steps run all occupied slots in
+    one ragged ``decode_step`` call (vector ``pos``).  Joining writes a
+    single-request prefill into a free slot's rows; leaving just frees
+    the slot.  Width-plan boundaries re-shape the *live* cache through
+    ``WidthSwapper.reshape_states`` — see the module docstring for the
+    transaction/recovery semantics.
+
+    Decoder-only models only (``cfg.is_encdec`` is rejected): cross
+    -attention caches have no slot-local rewrite path.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512,
+                 batch_slots: int = 4, rng_seed: int = 0,
+                 planner=None, swapper=None, admission=None, degrader=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 batch_cost_fn=None, max_retries: int = 2,
+                 boundary_every: int = 4, boundary_cooldown: int = 8):
+        if cfg.is_encdec:
+            raise ValueError("continuous batching supports decoder-only "
+                             "models (no cross-attention cache rewrite)")
+        if degrader is not None and admission is None:
+            raise ValueError(
+                "a degradation controller needs an AdmissionControl as "
+                "its overload-signal source; pass admission= too")
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.slots = int(batch_slots)
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.planner = planner
+        self.swapper = swapper
+        self.admission = admission
+        self.degrader = degrader
+        self.clock = clock
+        self.batch_cost_fn = batch_cost_fn
+        self.max_retries = max(int(max_retries), 0)
+        # Plan boundaries are only *considered* every `boundary_every`
+        # engine steps (a continuous engine has no natural batch edge),
+        # and after a failed crossing the engine serves `boundary_cooldown`
+        # steps on the canonical tree before retrying — so a crash-looping
+        # swap cannot starve the requeued requests out of their retries.
+        self.boundary_every = max(int(boundary_every), 1)
+        self.boundary_cooldown = max(int(boundary_cooldown), 0)
+
+        # Active serving state: params + the realized widths they carry.
+        self.params_active = params
+        self._canonical = params if swapper is None else swapper.full_params
+        n_refs = len(tfm.decoder_layer_refs(cfg))
+        self._full_heads = np.full(n_refs, cfg.n_heads, dtype=np.int64)
+        self._heads_active = self._full_heads.copy()
+        self._plan_active: Optional[WidthPlan] = None
+        self._key_active: Optional[tuple] = None
+
+        # Slot state: one shared decode pytree + per-slot positions.
+        self.states = tfm.init_decode_state(cfg, self.slots, self.max_len)
+        self.pos = np.zeros(self.slots, dtype=np.int64)
+        self._slots: List[Optional[_Tracked]] = [None] * self.slots
+        self._last_tok = np.zeros(self.slots, dtype=np.int32)
+
+        # Queues: pending (future arrivals, by time), waiting (delivered,
+        # not yet admitted), retry (admitted work evicted by a boundary
+        # failure — rejoins ahead of the queue, without re-admission).
+        self._pending: deque = deque()
+        self._queue: deque = deque()
+        self._retry: deque = deque()
+        self.draining = False
+
+        # Accounting.
+        self._next_rid = 0
+        self._results: dict[int, Result] = {}
+        self._submitted = 0
+        self._finished = 0
+        self._shed = 0
+        self._failed = 0
+        self.steps = 0
+        self._decode_steps = 0
+        self._last_boundary_fail = -(10 ** 9)
+        self.plan_log: List[WidthPlan] = []
+        self.swap_log: List = []
+        self.boundary_log: List[BoundaryEvent] = []
+        self.join_count = 0
+
+        self._decode = jax.jit(
+            lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
+        self._prefill = jax.jit(
+            lambda p, toks: tfm.forward(p, cfg, tokens=toks,
+                                        mode="prefill"))
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, request: Request, *, arrival_t: Optional[float] = None,
+               klass: str = "") -> int:
+        """Register one request; returns its id.  Arrivals in the future
+        (``arrival_t`` > now) are delivered when the clock reaches them.
+        A draining engine sheds immediately — it no longer admits."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._submitted += 1
+        t = self.clock() if arrival_t is None else float(arrival_t)
+        tr = _Tracked(rid=rid, request=request, klass=klass, arrival_t=t)
+        if self.draining:
+            self._terminal(tr, shed=True)
+            return rid
+        self._pending.append(tr)
+        return rid
+
+    def result(self, rid: int) -> Optional[Result]:
+        return self._results.get(rid)
+
+    def ledger(self) -> Ledger:
+        return Ledger(
+            submitted=self._submitted, finished=self._finished,
+            shed=self._shed, failed=self._failed,
+            in_flight=sum(tr is not None for tr in self._slots)
+            + len(self._retry),
+            queued=len(self._queue) + len(self._pending))
+
+    # ------------------------------------------------------------------
+    # terminal states
+    # ------------------------------------------------------------------
+    def _terminal(self, tr: _Tracked, *, shed: bool = False,
+                  failed: bool = False) -> Result:
+        now = self.clock()
+        lat = now - tr.arrival_t
+        d = tr.request.deadline_s
+        res = Result(
+            tokens=np.asarray(tr.generated, dtype=np.int32),
+            steps=len(tr.generated), shed=shed,
+            deadline_missed=(d is not None and lat > d
+                             and (shed or not failed)
+                             and bool(tr.generated or not shed)),
+            latency_s=lat, retries=tr.retries, failed=failed,
+            recovered=(tr.retries > 0 and not shed and not failed))
+        self._results[tr.rid] = res
+        if failed:
+            self._failed += 1
+        elif shed:
+            self._shed += 1
+        else:
+            self._finished += 1
+        return res
+
+    def _finish(self, tr: _Tracked) -> None:
+        res = self._terminal(tr)
+        if self.admission is not None:
+            self.admission.observe(self.clock() - tr.join_t)
+        if self.planner is not None:
+            name = (self._plan_active.traffic.name
+                    if self._plan_active is not None else tr.klass)
+            self.planner.record(name or "default", res.latency_s)
+
+    # ------------------------------------------------------------------
+    # queue movement
+    # ------------------------------------------------------------------
+    def _deliver(self) -> None:
+        """Move pending arrivals whose time has come into the queue."""
+        now = self.clock()
+        ready = [tr for tr in self._pending if tr.arrival_t <= now]
+        if ready:
+            self._pending = deque(
+                tr for tr in self._pending if tr.arrival_t > now)
+            ready.sort(key=lambda tr: (tr.arrival_t, tr.rid))
+            self._queue.extend(ready)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, tr in enumerate(self._slots):
+            if tr is None:
+                return i
+        return None
+
+    def _join_waiting(self) -> int:
+        """Fill free slots from the retry queue (pre-admitted) then the
+        waiting queue (through admission).  Returns prefill token count
+        for this step's cost accounting."""
+        tokens = 0
+        while True:
+            i = self._free_slot()
+            if i is None:
+                break
+            if self._retry:
+                tr = self._retry.popleft()
+            elif self._queue:
+                tr = self._queue.popleft()
+                if self.admission is not None and not self.admission.admit(
+                        tr.request, now=self.clock(),
+                        arrival=tr.arrival_t,
+                        backlog_batches=len(self._queue) // self.slots):
+                    self._terminal(tr, shed=True)
+                    continue
+            else:
+                break
+            tokens += self._join(i, tr)
+        return tokens
+
+    def _join(self, i: int, tr: _Tracked) -> int:
+        """Prefill ``tr``'s prompt (plus any tokens generated before a
+        requeue) into slot ``i``.  Returns the prefill token count."""
+        prompt = np.concatenate(
+            [np.asarray(tr.request.prompt, dtype=np.int32),
+             np.asarray(tr.generated, dtype=np.int32)])
+        remaining = tr.request.max_new_tokens - len(tr.generated)
+        if remaining <= 0:          # requeued after its last token
+            tr.join_t = self.clock()
+            self._finish(tr)
+            return 0
+        if len(prompt) + remaining > self.max_len:
+            self._terminal(tr, failed=True)
+            return 0
+        tr.join_t = self.clock()
+        logits, states, _ = self._prefill(self.params_active, prompt[None])
+        self._write_slot(i, states, len(prompt))
+        last = logits[0, -1, :self.cfg.vocab_size]
+        first = int(jnp.argmax(last))
+        tr.generated.append(first)
+        self._slots[i] = tr
+        self.pos[i] = len(prompt)
+        self._last_tok[i] = first
+        self.join_count += 1
+        if self._done(tr):
+            self._release(i)
+        return len(prompt)
+
+    def _done(self, tr: _Tracked) -> bool:
+        if len(tr.generated) >= tr.request.max_new_tokens:
+            return True
+        return tr.request.eos_id >= 0 \
+            and tr.generated[-1] == tr.request.eos_id
+
+    def _release(self, i: int) -> None:
+        tr = self._slots[i]
+        self._slots[i] = None
+        self.pos[i] = 0
+        self._last_tok[i] = 0
+        if tr is not None:
+            self._finish(tr)
+
+    # ------------------------------------------------------------------
+    # slot cache writes
+    # ------------------------------------------------------------------
+    def _write_slot(self, i: int, prefill_states: dict, plen: int) -> None:
+        """Write a one-request prefill's layer states into slot ``i`` of
+        the shared decode pytree.  K/V caches land in rows ``0..plen`` of
+        the slot's sequence axis; recurrent states replace the slot's
+        row wholesale."""
+
+        def write_group(gst: dict, lst: dict, stacked: bool) -> dict:
+            out = dict(gst)
+            for key, lv in lst.items():
+                gv = gst[key]
+                if key in ("k", "v"):
+                    # (B, S, KV, dh) / stacked (U, B, S, KV, dh)
+                    s = lv.shape[2 if stacked else 1]
+                    if stacked:
+                        upd = gv.at[:, i, :s] if s < gv.shape[2] \
+                            else gv.at[:, i]
+                        out[key] = upd.set(lv[:, 0].astype(gv.dtype))
+                    else:
+                        upd = gv.at[i, :s] if s < gv.shape[1] else gv.at[i]
+                        out[key] = upd.set(lv[0].astype(gv.dtype))
+                else:
+                    # per-slot state without a sequence axis (recurrent)
+                    out[key] = (gv.at[:, i].set(lv[:, 0].astype(gv.dtype))
+                                if stacked
+                                else gv.at[i].set(lv[0].astype(gv.dtype)))
+            return out
+
+        st = dict(self.states)
+        if "stack" in prefill_states:
+            stack = dict(st["stack"])
+            for key, lst in prefill_states["stack"].items():
+                stack[key] = write_group(stack[key], lst, stacked=True)
+            st["stack"] = stack
+        if "extra" in prefill_states:
+            extra = dict(st.get("extra", {}))
+            for key, lst in prefill_states["extra"].items():
+                extra[key] = write_group(extra[key], lst, stacked=False)
+            st["extra"] = extra
+        self.states = st
+
+    def _fresh_states(self, heads) -> dict:
+        """A fresh (empty) decode pytree shaped for realized ``heads`` —
+        canonical shapes re-sliced through the swapper, no fault hook in
+        the path (recovery must not be injectable)."""
+        st = tfm.init_decode_state(self.cfg, self.slots, self.max_len)
+        if self.swapper is None or (heads == self._full_heads).all():
+            return st
+        hook, self.swapper.reshape_fault_hook = \
+            self.swapper.reshape_fault_hook, None
+        try:
+            return self.swapper.reshape_states(st, self._full_heads, heads)
+        finally:
+            self.swapper.reshape_fault_hook = hook
+
+    # ------------------------------------------------------------------
+    # boundary transactions
+    # ------------------------------------------------------------------
+    def _live_tokens(self) -> int:
+        live = int(sum(self.pos[i] for i, tr in enumerate(self._slots)
+                       if tr is not None))
+        return max(live, 1)
+
+    def _requeue_in_flight(self) -> int:
+        """Evict every occupied slot back to the retry queue, generated
+        tokens intact.  Requests out of retries become terminal failures
+        — accounted, never silently dropped."""
+        n = 0
+        for i, tr in enumerate(self._slots):
+            if tr is None:
+                continue
+            self._slots[i] = None
+            self.pos[i] = 0
+            self._last_tok[i] = 0
+            tr.retries += 1
+            if tr.retries > self.max_retries:
+                self._terminal(tr, failed=True)
+            else:
+                self._retry.append(tr)
+            n += 1
+        return n
+
+    def _abort_boundary(self, outcome: str, plan, error: str) -> None:
+        """Transaction rollback: restore the canonical tree + fresh
+        canonical-shape state, requeue live work."""
+        requeued = self._requeue_in_flight()
+        self.params_active = self._canonical
+        self._heads_active = self._full_heads.copy()
+        self._plan_active = None
+        self._key_active = None
+        self.states = tfm.init_decode_state(self.cfg, self.slots,
+                                            self.max_len)
+        self._last_boundary_fail = self.steps
+        self.boundary_log.append(BoundaryEvent(
+            step=self.steps, plan_name=plan.traffic.name,
+            outcome=outcome, requeued=requeued, error=error))
+
+    def _maybe_cross_boundary(self) -> None:
+        if self.swapper is None:
+            return
+        if self.degrader is not None:
+            plan = self.degrader.select(self._live_tokens())
+        elif self.planner is not None:
+            plan = self.planner.select(self._live_tokens())
+        else:
+            return
+        if self.steps - self._last_boundary_fail < self.boundary_cooldown:
+            return                      # cooling down after a failure
+        mlp_t, heads_to = self.swapper.realize_plan(plan)
+        key = (tuple(mlp_t.tolist()), tuple(heads_to.tolist()))
+        if key == self._key_active or (
+                self._key_active is None
+                and (mlp_t == self.cfg.d_ff).all()
+                and (heads_to == self.cfg.n_heads).all()):
+            return                      # same realized widths: no boundary
+        params_new, event = self.swapper.apply_guarded(plan)
+        self.swap_log.append(event)
+        if event.outcome != "ok":
+            self._abort_boundary("swap_rolled_back", plan, event.error)
+            return
+        g = self.cfg.n_heads // max(self.cfg.n_kv_heads, 1)
+        kv_from = np.maximum(self._heads_active // g, 1)
+        kv_to = np.maximum(heads_to // g, 1)
+        live = any(tr is not None for tr in self._slots)
+        if live and (kv_to > kv_from).any():
+            # Growing KV heads cannot restore sliced-away history:
+            # requeue the live requests so their tokens re-prefill at the
+            # new width, then adopt the plan on a fresh cache.
+            requeued = self._requeue_in_flight()
+            self.states = self._fresh_states(heads_to)
+            outcome = "requeued_grow"
+        else:
+            try:
+                self.states = self.swapper.reshape_states(
+                    self.states, self._heads_active, heads_to)
+                requeued = 0
+                outcome = "ok"
+            except Exception as e:  # noqa: BLE001 — the guard IS the point
+                self._abort_boundary("reshape_failed", plan,
+                                     f"{type(e).__name__}: {e}")
+                return
+        self.params_active = params_new
+        self._heads_active = heads_to
+        self._plan_active = plan
+        self._key_active = key
+        self.plan_log.append(plan)
+        self.boundary_log.append(BoundaryEvent(
+            step=self.steps, plan_name=plan.traffic.name,
+            outcome=outcome, requeued=requeued))
+
+    # ------------------------------------------------------------------
+    # the engine step
+    # ------------------------------------------------------------------
+    def _watchdog(self) -> None:
+        """Shed any decoding request past its deadline — enforcement
+        *during* decode, not only at admission."""
+        now = self.clock()
+        for i, tr in enumerate(self._slots):
+            if tr is None or tr.request.deadline_s is None:
+                continue
+            if now - tr.arrival_t > tr.request.deadline_s:
+                self._slots[i] = None
+                self.pos[i] = 0
+                self._last_tok[i] = 0
+                self._terminal(tr, shed=True)
+
+    def step(self) -> bool:
+        """One engine step: deliver arrivals, join free slots, decode one
+        token for every occupied slot, account time, enforce watchdogs,
+        consider a plan boundary.  Returns True while work remains."""
+        self.steps += 1
+        self._deliver()
+        if self.steps % self.boundary_every == 0:
+            self._maybe_cross_boundary()
+        prefill_tokens = self._join_waiting()
+        active = [i for i, tr in enumerate(self._slots) if tr is not None]
+        if not active and prefill_tokens == 0:
+            if not (self._queue or self._retry) and self._pending:
+                # idle until the next arrival: fast-forward a virtual
+                # clock; a wall clock delivers immediately (open-loop
+                # arrival times in the past).
+                nxt = min(tr.arrival_t for tr in self._pending)
+                advance = getattr(self.clock, "advance", None)
+                if advance is not None and nxt > self.clock():
+                    advance(nxt - self.clock())
+                else:
+                    self._queue.extend(
+                        sorted(self._pending,
+                               key=lambda tr: (tr.arrival_t, tr.rid)))
+                    self._pending.clear()
+                return self._outstanding()
+            return self._outstanding()
+
+        t0 = self.clock()
+        decoded = 0
+        if active:
+            toks = jnp.asarray(self._last_tok)
+            posv = jnp.asarray(self.pos)
+            logits, self.states = self._decode(self.params_active, toks,
+                                               posv, self.states)
+            logits = logits[:, :self.cfg.vocab_size]
+            cur = self._sample(logits, active)
+            host = np.asarray(cur)
+            for i in active:
+                tr = self._slots[i]
+                tr.generated.append(int(host[i]))
+                self.pos[i] += 1
+                self._last_tok[i] = int(host[i])
+                decoded += 1
+                if self._done(tr):
+                    self._release(i)
+            self._decode_steps += 1
+
+        # time accounting: modeled (virtual clock) or measured
+        step_tokens = decoded + prefill_tokens
+        if self.batch_cost_fn is not None and step_tokens:
+            dt = self.batch_cost_fn(self._plan_active, step_tokens)
+            advance = getattr(self.clock, "advance", None)
+            if advance is not None:
+                advance(dt)
+        self._watchdog()
+        if self.admission is not None and self.degrader is not None:
+            qb = (len(self._queue) + len(self._retry)
+                  + self.slots - 1) // self.slots
+            self.degrader.observe(self.admission.signal(qb))
+        del t0
+        return self._outstanding()
+
+    def _sample(self, logits, active):
+        temps = [self._slots[i].request.temperature for i in active]
+        if not any(t > 0 for t in temps):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        temp = np.ones(self.slots, np.float32)
+        use = np.zeros(self.slots, bool)
+        for i in active:
+            t = self._slots[i].request.temperature
+            if t > 0:
+                temp[i] = max(t, 1e-6)
+                use[i] = True
+        self.rng, sub = jax.random.split(self.rng)
+        nxt = jax.random.categorical(
+            sub, logits / jnp.asarray(temp)[:, None], axis=-1)
+        greedy = jnp.argmax(logits, axis=-1)
+        return jnp.where(jnp.asarray(use), nxt, greedy).astype(jnp.int32)
+
+    def _outstanding(self) -> bool:
+        return (bool(self._pending) or bool(self._queue)
+                or bool(self._retry)
+                or any(tr is not None for tr in self._slots))
+
+    # ------------------------------------------------------------------
+    # front doors
+    # ------------------------------------------------------------------
+    def run(self, arrivals: Sequence, *, max_steps: int = 1_000_000
+            ) -> List[Result]:
+        """Serve an open-loop workload (``Arrival``s or bare ``Request``s,
+        which arrive immediately) to completion; results align with the
+        input order."""
+        rids = []
+        for a in arrivals:
+            if isinstance(a, Arrival):
+                rids.append(self.submit(a.request, arrival_t=a.t,
+                                        klass=a.klass))
+            else:
+                rids.append(self.submit(a))
+        steps = 0
+        while self._outstanding():
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"run exceeded {max_steps} steps")
+            self.step()
+        return [self._results[r] for r in rids]
+
+    def drain(self, *, max_steps: int = 100_000) -> Ledger:
+        """Stop admitting, shed the waiting queue, finish (or shed, once
+        ``max_steps`` is spent) the in-flight work, and return a complete
+        ledger."""
+        self.draining = True
+        self._deliver()
+        for tr in list(self._pending) + list(self._queue):
+            self._terminal(tr, shed=True)
+        self._pending.clear()
+        self._queue.clear()
+        steps = 0
+        while self._retry or any(tr is not None for tr in self._slots):
+            steps += 1
+            if steps > max_steps:
+                for i, tr in enumerate(self._slots):
+                    if tr is not None:
+                        self._slots[i] = None
+                        self.pos[i] = 0
+                        self._terminal(tr, shed=True)
+                while self._retry:
+                    self._terminal(self._retry.popleft(), shed=True)
+                break
+            self.step()
+        led = self.ledger()
+        assert led.complete, f"drain ledger does not sum: {led}"
+        return led

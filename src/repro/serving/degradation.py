@@ -144,12 +144,19 @@ class DegradationController:
 
     def __init__(self, ladder: DegradationLadder, *,
                  down_threshold: float = 1.0, up_threshold: float = 0.5,
-                 down_patience: int = 2, up_patience: int = 4):
+                 down_patience: int = 2, up_patience: int = 4,
+                 observe_every: int = 1):
         if up_threshold >= down_threshold:
             raise ValueError(
                 f"hysteresis requires up_threshold < down_threshold "
                 f"(got {up_threshold} >= {down_threshold})")
         self.ladder = ladder
+        # The batch engine observes once per batch; the continuous
+        # engine observes once per *decode step*, which at the same
+        # patience would shift a ladder an order of magnitude faster.
+        # observe_every coalesces: only every Nth observe() is scored.
+        self.observe_every = max(int(observe_every), 1)
+        self._observe_calls = 0
         self.down_threshold = down_threshold
         self.up_threshold = up_threshold
         self.down_patience = max(int(down_patience), 1)
@@ -163,6 +170,9 @@ class DegradationController:
     def observe(self, signal: float) -> int:
         """Feed one per-batch overload signal; returns the (possibly
         shifted) active level."""
+        self._observe_calls += 1
+        if self._observe_calls % self.observe_every != 0:
+            return self.level
         self._batches += 1
         if signal >= self.down_threshold:
             self._hot += 1

@@ -95,6 +95,9 @@ class Result:
     shed: bool = False              # rejected by admission control
     deadline_missed: bool = False   # completed, but past its budget
     latency_s: float = 0.0          # submission -> completion (engine clock)
+    retries: int = 0                # boundary-failure requeues survived
+    recovered: bool = False         # finished normally after >=1 requeue
+    failed: bool = False            # terminal failure (retry budget spent)
 
 
 def _shed_result() -> "Result":
@@ -250,18 +253,29 @@ class ServingWidthPlanner:
         # what lets a future closed loop re-solve plans from measured
         # tail behavior instead of static traffic classes.
         self.telemetry: dict[str, List[float]] = {}
+        # A serving process records one sample per request forever; an
+        # unbounded list is a slow leak.  Keep a sliding window — recent
+        # samples are also the ones a re-planning loop should trust.
+        self.telemetry_window = 4096
 
     def record(self, class_name: str, latency_s: float) -> None:
-        """Observe one served batch's latency for a traffic class."""
-        self.telemetry.setdefault(class_name, []).append(float(latency_s))
+        """Observe one served batch's latency for a traffic class.
+        Memory is bounded: only the latest ``telemetry_window`` samples
+        per class are retained."""
+        lats = self.telemetry.setdefault(class_name, [])
+        lats.append(float(latency_s))
+        if len(lats) > self.telemetry_window:
+            del lats[:-self.telemetry_window]
 
     def observed_percentile(self, class_name: str,
                             q: float) -> Optional[float]:
         """q-th percentile of observed batch latencies for a class, or
-        None before any observation."""
+        None before any observation.  ``q`` is clamped to [0, 100] so
+        p99.9-style callers can't trip numpy on a rounding excursion."""
         lats = self.telemetry.get(class_name)
         if not lats:
             return None
+        q = min(max(float(q), 0.0), 100.0)
         return float(np.percentile(np.asarray(lats), q))
 
     def _retokened(self, tokens: int) -> list:

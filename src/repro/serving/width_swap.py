@@ -242,7 +242,7 @@ class WidthSwapper:
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_plans: int = 8,
-                 fault_hook=None):
+                 fault_hook=None, reshape_fault_hook=None):
         self.full_params = params
         self.cfg = cfg
         self.refs = tfm.decoder_layer_refs(cfg)
@@ -253,6 +253,11 @@ class WidthSwapper:
         # checkpoint inside apply(); it may raise to simulate a mid-swap
         # failure (the chaos harness's injection point).
         self.fault_hook = fault_hook
+        # Optional callable() invoked at the top of reshape_states —
+        # the KV-reshape analogue of fault_hook (the continuous engine's
+        # boundary transaction must survive a fault here too; see
+        # serving.chaos.ReshapeFailureInjector).
+        self.reshape_fault_hook = reshape_fault_hook
 
     def _step(self, name: str) -> None:
         if self.fault_hook is not None:
@@ -432,6 +437,23 @@ class WidthSwapper:
                 error=f"{type(e).__name__}: {e}")
             return self.full_params, event
 
+    # ---- plan realization helper ---------------------------------------
+    def realize_plan(self, plan):
+        """Per-decoder-layer realized ``(mlp_w, heads)`` arrays for a
+        WidthPlan — the head vector :meth:`reshape_states` needs on each
+        side of a boundary.  The full-width plan (``widths={}``) realizes
+        to the canonical widths even without a module mapping."""
+        if not getattr(plan, "widths", None):
+            n = len(self.refs)
+            return (np.full(n, self.cfg.d_ff, dtype=np.int64),
+                    np.full(n, self.cfg.n_heads, dtype=np.int64))
+        if not getattr(plan, "modules", None):
+            raise ValueError(
+                "plan has no module mapping; build templates with "
+                "width_swap.serving_templates and pass modules= to "
+                "ServingWidthPlanner")
+        return self.realize(plan.widths, plan.modules)
+
     # ---- KV state re-shaping -------------------------------------------
     def reshape_states(self, states: Optional[dict], heads_from,
                        heads_to) -> Optional[dict]:
@@ -439,7 +461,11 @@ class WidthSwapper:
         another's at a batch boundary.  Shrinking slices the cached
         K/V head prefix (exact: GQA keeps a prefix of KV heads); growing
         zero-pads the new head slots, which have no cached history —
-        engines that prefill per batch never hit the growing case."""
+        engines that prefill per batch never hit the growing case, and
+        the continuous engine re-prefills grown requests from their own
+        token history instead of decoding on zero-history heads."""
+        if self.reshape_fault_hook is not None:
+            self.reshape_fault_hook()
         if states is None:
             return None
         cfg = self.cfg

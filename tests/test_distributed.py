@@ -13,6 +13,9 @@ pytestmark = pytest.mark.slow
 
 PREAMBLE = """
 import os
+# pin the CPU backend: without it jax probes for a TPU first (minutes of
+# retried metadata fetches in this container) before falling back
+os.environ["JAX_PLATFORMS"] = "cpu"
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
@@ -206,6 +209,7 @@ class TestElasticRestore:
 class TestCompressedPsum:
     def test_ef_converges_to_true_mean(self):
         run_sub("""
+        from repro.compat import shard_map
         from repro.parallel.compression import compressed_psum_tree
         mesh = jax.make_mesh((8,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1, 64))
@@ -216,9 +220,9 @@ class TestCompressedPsum:
                                               "pod")
             return out["w"], e_new["w"]
 
-        sm = jax.jit(jax.shard_map(
+        sm = jax.jit(shard_map(
             f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-            out_specs=(P(None), P("pod")), check_vma=False))
+            out_specs=(P(None), P("pod"))))
         e = jnp.zeros((8, 1, 64))
         outs = []
         for i in range(30):

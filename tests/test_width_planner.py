@@ -158,3 +158,49 @@ class TestSelectEdgeCases:
                                       modules=modules)
         plans = planner.plan([TrafficClass("decode", 256)])
         assert plans["decode"].modules is modules
+
+
+class TestTelemetry:
+    """Observed-latency telemetry: the measurement half of a future
+    closed re-planning loop, so its edge cases matter."""
+
+    def test_unobserved_class_is_none(self):
+        planner = ServingWidthPlanner(HW, [])
+        assert planner.observed_percentile("ghost", 99) is None
+        planner.record("real", 0.1)
+        assert planner.observed_percentile("ghost", 99) is None
+
+    def test_single_sample_is_every_percentile(self):
+        planner = ServingWidthPlanner(HW, [])
+        planner.record("decode", 0.25)
+        for q in (0, 50, 99, 100):
+            assert planner.observed_percentile("decode", q) \
+                == pytest.approx(0.25)
+
+    def test_percentile_q_is_clamped(self):
+        """p99.9-style callers arrive via floats; q outside [0, 100]
+        clamps to the extremes instead of raising."""
+        planner = ServingWidthPlanner(HW, [])
+        for v in (0.1, 0.2, 0.3):
+            planner.record("decode", v)
+        assert planner.observed_percentile("decode", 100.0001) \
+            == pytest.approx(0.3)
+        assert planner.observed_percentile("decode", -5) \
+            == pytest.approx(0.1)
+        assert planner.observed_percentile("decode", 99.9) \
+            == pytest.approx(planner.observed_percentile("decode", 99.9))
+
+    def test_record_memory_is_bounded(self):
+        """A serving process records one sample per request forever; the
+        window must cap per-class memory and keep the *latest* samples."""
+        planner = ServingWidthPlanner(HW, [])
+        planner.telemetry_window = 64
+        for i in range(1000):
+            planner.record("decode", float(i))
+        assert len(planner.telemetry["decode"]) == 64
+        assert planner.telemetry["decode"][0] == 936.0   # oldest kept
+        assert planner.observed_percentile("decode", 0) == 936.0
+        assert planner.observed_percentile("decode", 100) == 999.0
+        # other classes are independent windows
+        planner.record("prefill", 1.0)
+        assert len(planner.telemetry["prefill"]) == 1
