@@ -4,6 +4,7 @@
 #   bash scripts/ci.sh                 # all stages, in order
 #   bash scripts/ci.sh --tier quick    # one stage (CI job sharding)
 #   bash scripts/ci.sh --tier chaos
+#   bash scripts/ci.sh --tier kernels
 #   bash scripts/ci.sh --tier perf
 #
 # Exits non-zero on the first failing stage, so the perf gate
@@ -24,15 +25,15 @@ while [[ $# -gt 0 ]]; do
       [[ $# -ge 2 ]] || { echo "ci: --tier needs an argument" >&2; exit 2; }
       tier="$2"; shift 2 ;;
     *)
-      echo "ci: unknown argument '$1' (usage: ci.sh [--tier quick|chaos|perf])" >&2
+      echo "ci: unknown argument '$1' (usage: ci.sh [--tier quick|chaos|kernels|perf])" >&2
       exit 2 ;;
   esac
 done
 
 case "$tier" in
-  all|quick|chaos|perf) ;;
+  all|quick|chaos|kernels|perf) ;;
   *)
-    echo "ci: unknown tier '$tier' (expected quick, chaos, or perf)" >&2
+    echo "ci: unknown tier '$tier' (expected quick, chaos, kernels, or perf)" >&2
     exit 2 ;;
 esac
 
@@ -44,6 +45,13 @@ fi
 if [[ "$tier" == "all" || "$tier" == "chaos" ]]; then
   echo "== chaos tier =="
   python -m pytest -q -m chaos
+fi
+
+if [[ "$tier" == "all" || "$tier" == "kernels" ]]; then
+  echo "== kernels tier =="
+  # Interpret-mode Pallas kernels + the fused-staircase differential
+  # suite + tile autotuner goldens (no accelerator required).
+  python -m pytest -q -m kernels
 fi
 
 if [[ "$tier" == "all" || "$tier" == "perf" ]]; then

@@ -106,17 +106,23 @@ def _shape_fields(layer: LayerShape) -> dict:
             "flop_multiplier": layer.flop_multiplier}
 
 
-def _meta(hw: HardwareSpec, layer: LayerShape) -> str:
+def _meta(hw: HardwareSpec, layer: LayerShape, variant: str = "") -> str:
+    # ``variant`` names the sweep engine that produced the tables (the
+    # model's non-default ``backend``); engines agree only to tolerance,
+    # so their entries must not share keys.  The empty string (the exact
+    # numpy engine) keeps the historical meta/key unchanged.
+    tail = f', "variant": {json.dumps(variant)}' if variant else ""
     return (f'{{"hw": {_hw_json(hw)}, "shape": '
             f'{json.dumps(_shape_fields(layer), sort_keys=True)}, '
-            f'"version": {CACHE_VERSION}}}')
+            f'"version": {CACHE_VERSION}{tail}}}')
 
 
-def table_key(hw: HardwareSpec, layer: LayerShape,
-              widths: np.ndarray) -> str:
-    """Cache key: (hw fingerprint, shape-minus-width, width-vector hash)."""
+def table_key(hw: HardwareSpec, layer: LayerShape, widths: np.ndarray,
+              variant: str = "") -> str:
+    """Cache key: (hw fingerprint, shape-minus-width, width-vector hash,
+    sweep-engine variant)."""
     w = np.ascontiguousarray(np.asarray(widths, dtype=np.int64))
-    h = hashlib.sha256(_meta(hw, layer).encode())
+    h = hashlib.sha256(_meta(hw, layer, variant).encode())
     h.update(w.tobytes())
     return h.hexdigest()
 
@@ -188,7 +194,8 @@ class ProfileTableCache:
         return self.root / key[:2] / f"{key}.npz"
 
     def get(self, hw: HardwareSpec, layer: LayerShape,
-            widths: np.ndarray) -> dict[str, np.ndarray] | None:
+            widths: np.ndarray,
+            variant: str = "") -> dict[str, np.ndarray] | None:
         """Arrays stored for (hw, shape, widths), or None on miss.
 
         A hit re-verifies the stored meta (version/hw/shape) and width
@@ -198,7 +205,7 @@ class ProfileTableCache:
         the caller's re-sweep rewrites a fresh entry instead of
         re-reading the corrupt one forever."""
         w = np.asarray(widths, dtype=np.int64)
-        path = self._path(table_key(hw, layer, w))
+        path = self._path(table_key(hw, layer, w, variant))
         if not path.exists():
             self.stats.misses += 1
             return None
@@ -207,7 +214,7 @@ class ProfileTableCache:
                 with np.load(path, allow_pickle=False) as z:
                     meta = str(z["__meta__"])
                     stored_w = z["widths"]
-                    if meta != _meta(hw, layer) \
+                    if meta != _meta(hw, layer, variant) \
                             or stored_w.shape != w.shape \
                             or (stored_w != w).any():
                         self.stats.misses += 1
@@ -226,11 +233,11 @@ class ProfileTableCache:
         return out
 
     def put(self, hw: HardwareSpec, layer: LayerShape, widths: np.ndarray,
-            arrays: Mapping[str, np.ndarray]) -> Path:
+            arrays: Mapping[str, np.ndarray], variant: str = "") -> Path:
         """Atomically persist parallel arrays for (hw, shape, widths)."""
         w = np.asarray(widths, dtype=np.int64)
-        path = self._path(table_key(hw, layer, w))
-        _atomic_savez(path, __meta__=np.array(_meta(hw, layer)),
+        path = self._path(table_key(hw, layer, w, variant))
+        _atomic_savez(path, __meta__=np.array(_meta(hw, layer, variant)),
                       widths=w, **dict(arrays))
         self.stats.writes += 1
         self._evict_to_cap(keep=path)
@@ -245,8 +252,12 @@ class ProfileTableCache:
     # to one stacked sweep, which is far cheaper than 1000 file opens.
 
     def stack_key(self, hw: HardwareSpec, layers: Sequence[LayerShape],
-                  w2d: np.ndarray, counts: np.ndarray) -> str:
-        h = hashlib.sha256(f"stack:{CACHE_VERSION}:{_hw_json(hw)}".encode())
+                  w2d: np.ndarray, counts: np.ndarray,
+                  variant: str = "") -> str:
+        h = hashlib.sha256(
+            f"stack:{CACHE_VERSION}:{variant}:{_hw_json(hw)}".encode()
+            if variant else
+            f"stack:{CACHE_VERSION}:{_hw_json(hw)}".encode())
         for layer in layers:
             h.update(repr(sorted(_shape_fields(layer).items())).encode())
         h.update(np.ascontiguousarray(w2d, dtype=np.int64).tobytes())
@@ -254,21 +265,23 @@ class ProfileTableCache:
         return h.hexdigest()
 
     def get_stack(self, hw: HardwareSpec, layers: Sequence[LayerShape],
-                  w2d: np.ndarray,
-                  counts: np.ndarray) -> np.ndarray | None:
+                  w2d: np.ndarray, counts: np.ndarray,
+                  variant: str = "") -> np.ndarray | None:
         """The (L, C) latency matrix for a whole packed stack, or None.
 
         Unreadable bundles follow the same retry-then-quarantine path as
         per-layer entries (``stats.corrupted``, renamed to ``*.bad``)."""
-        key = self.stack_key(hw, layers, w2d, counts)
+        key = self.stack_key(hw, layers, w2d, counts, variant)
         path = self._path(key)
         if not path.exists():
             self.stats.misses += 1
             return None
+        stack_meta = f"stack:{CACHE_VERSION}:{variant}" if variant \
+            else f"stack:{CACHE_VERSION}"
         for attempt in (0, 1):
             try:
                 with np.load(path, allow_pickle=False) as z:
-                    if str(z["__meta__"]) != f"stack:{CACHE_VERSION}" \
+                    if str(z["__meta__"]) != stack_meta \
                             or not np.array_equal(z["w2d"], w2d) \
                             or not np.array_equal(z["counts"], counts):
                         self.stats.misses += 1
@@ -287,12 +300,69 @@ class ProfileTableCache:
 
     def put_stack(self, hw: HardwareSpec, layers: Sequence[LayerShape],
                   w2d: np.ndarray, counts: np.ndarray,
-                  lat2d: np.ndarray) -> Path:
-        path = self._path(self.stack_key(hw, layers, w2d, counts))
-        _atomic_savez(path, __meta__=np.array(f"stack:{CACHE_VERSION}"),
+                  lat2d: np.ndarray, variant: str = "") -> Path:
+        path = self._path(self.stack_key(hw, layers, w2d, counts, variant))
+        stack_meta = f"stack:{CACHE_VERSION}:{variant}" if variant \
+            else f"stack:{CACHE_VERSION}"
+        _atomic_savez(path, __meta__=np.array(stack_meta),
                       w2d=np.asarray(w2d, dtype=np.int64),
                       counts=np.asarray(counts, dtype=np.int64),
                       latency_2d=np.asarray(lat2d, dtype=np.float64))
+        self.stats.writes += 1
+        self._evict_to_cap(keep=path)
+        return path
+
+    # ---- kernel tile configs --------------------------------------------
+    # Tiny entries persisting the tile autotuner's chosen blocks per
+    # (hardware, kernel, invocation shape+dtype) — see kernels/autotune.py.
+    # Selection is deterministic, so these are pure lookup-table reuse: a
+    # serving process resolves tiles from disk instead of re-enumerating
+    # the candidate space.
+
+    def _tiles_meta(self, hw: HardwareSpec, kernel: str,
+                    shape: Sequence[int]) -> str:
+        return (f'{{"tiles": {CACHE_VERSION}, "hw": {_hw_json(hw)}, '
+                f'"kernel": {json.dumps(kernel)}, '
+                f'"shape": {json.dumps(list(map(int, shape)))}}}')
+
+    def tiles_key(self, hw: HardwareSpec, kernel: str,
+                  shape: Sequence[int]) -> str:
+        return hashlib.sha256(
+            self._tiles_meta(hw, kernel, shape).encode()).hexdigest()
+
+    def get_tiles(self, hw: HardwareSpec, kernel: str,
+                  shape: Sequence[int]) -> tuple[int, ...] | None:
+        """Persisted block tuple for (hw, kernel, shape), or None."""
+        path = self._path(self.tiles_key(hw, kernel, shape))
+        if not path.exists():
+            self.stats.misses += 1
+            return None
+        for attempt in (0, 1):
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    if str(z["__meta__"]) != \
+                            self._tiles_meta(hw, kernel, shape):
+                        self.stats.misses += 1
+                        return None
+                    blocks = tuple(int(b) for b in z["blocks"])
+                break
+            except _READ_ERRORS:
+                if attempt == 0 and path.exists():
+                    continue
+                self._quarantine(path)
+                self.stats.misses += 1
+                return None
+        self.stats.hits += 1
+        self._touch(path)
+        return blocks
+
+    def put_tiles(self, hw: HardwareSpec, kernel: str,
+                  shape: Sequence[int],
+                  blocks: Sequence[int]) -> Path:
+        path = self._path(self.tiles_key(hw, kernel, shape))
+        _atomic_savez(
+            path, __meta__=np.array(self._tiles_meta(hw, kernel, shape)),
+            blocks=np.asarray(list(blocks), dtype=np.int64))
         self.stats.writes += 1
         self._evict_to_cap(keep=path)
         return path

@@ -241,6 +241,17 @@ class _LayerColumns:
 # point.
 _STACKED_CHUNK = 32768
 
+# Staircase evaluation engines (see ``repro.kernels.staircase_fused``):
+#   numpy            exact reference — bit-for-bit vs the frozen scalar path
+#   fused            affine-in-waves factoring, one fused NumPy pass; same
+#                    staircase (identical wave counts, latency within a few
+#                    ulp — the rounding order differs by the factoring)
+#   pallas           the fused sweep as a Pallas TPU kernel (float32 on
+#                    hardware; falls back to the fp64 fused reference off-TPU)
+#   pallas_interpret the Pallas kernel in interpret mode (runs anywhere;
+#                    float32 like the hardware kernel)
+BACKENDS = ("numpy", "fused", "pallas", "pallas_interpret")
+
 
 class WaveQuantizationModel:
     """Closed-form staircase model L(width) = dL * ceil(width / Q).
@@ -250,10 +261,19 @@ class WaveQuantizationModel:
     stack many layers into one call (see module docstring).  ``eval_points``
     counts widths evaluated since construction (benchmark instrumentation
     for the table-driven refactor).
+
+    ``backend`` selects the sweep engine (``BACKENDS``).  The non-numpy
+    engines require byte-aligned dtypes and widths >= 1 (the affine
+    factoring is exact only there) and fall back to the exact numpy core
+    otherwise, so every backend is total over the model's input domain.
     """
 
-    def __init__(self, hw: HardwareSpec):
+    def __init__(self, hw: HardwareSpec, backend: str = "numpy"):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {BACKENDS}")
         self.hw = hw
+        self.backend = backend
         self.eval_calls = 0    # number of evaluate/evaluate_batch calls
         self.eval_points = 0   # total widths evaluated across those calls
 
@@ -273,6 +293,45 @@ class WaveQuantizationModel:
         per_dev = ceil_div(layer.width, layer.shard_out)
         return ceil_div(per_dev, self.hw.lane)
 
+    # ---- fused backends -------------------------------------------------
+    def _kernel_staircase(self, w2d, shard_out, ca, mb, mc):
+        """Route a fused (rows, C) sweep through the Pallas kernel (via
+        ``kernels.ops`` dispatch; jax loads lazily there)."""
+        from repro.kernels import ops
+        force = "pallas_interpret" if self.backend == "pallas_interpret" \
+            else None
+        lat, waves, _ = ops.staircase_latency(
+            w2d, shard_out, ca, mb, mc, lane=self.hw.lane, force=force)
+        return lat.astype(np.float64), waves.astype(np.int64)
+
+    def _staircase_core_fused(self, layer: LayerShape, w: np.ndarray):
+        """Per-layer fused evaluation, or None when the input is outside
+        the fused domain (empty / signed widths, non-byte-aligned dtype)
+        and the exact numpy core must run instead."""
+        hw = self.hw
+        if w.size == 0 or int(w.min()) < 1 or layer.dtype_bits % 8 != 0:
+            return None
+        from repro.kernels.staircase_fused import fused_coeffs, fused_latency
+        sub = hw.sublane(layer.dtype_bits)
+        m_pad = ceil_div(layer.tokens, sub) * sub
+        k_pad = self.padded_dim(layer.d_in, layer.shard_in, hw.lane)
+        two_mk = (2.0 * m_pad) * k_pad
+        ca, mb, mc = fused_coeffs(
+            hw, two_mk=two_mk, mk=m_pad * k_pad, k_plus_m=k_pad + m_pad,
+            fm=layer.flop_multiplier, bits=layer.dtype_bits)
+        if self.backend in ("pallas", "pallas_interpret"):
+            latency, n_waves = self._kernel_staircase(
+                w[None, :], np.array([[layer.shard_out]], np.int64),
+                np.array([[ca]]), np.array([[mb]]), np.array([[mc]]))
+            latency, n_waves = latency[0], n_waves[0]
+        else:
+            latency, n_waves = fused_latency(
+                w, layer.shard_out, ca, mb, mc, lane=hw.lane,
+                all_so1=layer.shard_out == 1)
+        padded_per_dev = ((two_mk * layer.flop_multiplier) * hw.lane) \
+            * n_waves
+        return latency, n_waves, padded_per_dev, True
+
     def _staircase_core(self, layer: LayerShape, w: np.ndarray):
         """Shared vectorized core: (latency, n_waves, padded_per_dev, nonneg).
 
@@ -283,6 +342,10 @@ class WaveQuantizationModel:
         and power-of-two ceil-divs become shifts on the nonnegative fast
         path — bit-identical results, fewer/cheaper array passes.
         """
+        if self.backend != "numpy":
+            res = self._staircase_core_fused(layer, w)
+            if res is not None:
+                return res
         hw = self.hw
         sub = hw.sublane(layer.dtype_bits)
         m_pad = ceil_div(layer.tokens, sub) * sub
@@ -396,9 +459,12 @@ class WaveQuantizationModel:
         if n_layers and int(counts.min()) == n_cols:
             return (np.stack(vecs) if n_cols else
                     np.zeros((n_layers, 0), np.int64)), counts
-        packed = np.ones((n_layers, n_cols), dtype=np.int64)
+        # empty + per-row fill: each cell written exactly once (np.ones
+        # would write the whole matrix and then overwrite the data region)
+        packed = np.empty((n_layers, n_cols), dtype=np.int64)
         for i, v in enumerate(vecs):
             packed[i, : v.size] = v
+            packed[i, v.size:] = 1
         return packed, counts
 
     def _stack_columns(self, layers: Sequence[LayerShape]) -> _LayerColumns:
@@ -429,7 +495,36 @@ class WaveQuantizationModel:
             bytes_aligned=bool((bits % 8 == 0).all()) if len(layers) else True,
         )
 
-    def _staircase_core_stacked(self, cols: _LayerColumns, w: np.ndarray):
+    def _stacked_fused(self, cols: _LayerColumns, w: np.ndarray,
+                       need_padded: bool, out, scratch=None):
+        """Stacked fused evaluation, or None when outside the fused domain
+        (see ``_staircase_core_fused``)."""
+        hw = self.hw
+        if w.size == 0 or not cols.bytes_aligned or int(w.min()) < 1:
+            return None
+        from repro.kernels.staircase_fused import fused_coeffs, fused_latency
+        ca, mb, mc = fused_coeffs(
+            hw, two_mk=cols.two_mk, mk=cols.mk, k_plus_m=cols.k_plus_m,
+            fm=cols.fm, bits=cols.bits)
+        if self.backend in ("pallas", "pallas_interpret"):
+            latency, n_waves = self._kernel_staircase(
+                w, cols.shard_out, ca, mb, mc)
+            if out is not None:
+                out[...] = latency
+                latency = out
+        else:
+            latency, n_waves = fused_latency(
+                w, cols.shard_out, ca, mb, mc, lane=hw.lane,
+                all_so1=cols.all_so1, out=out, scratch=scratch,
+                need_waves=need_padded)
+        padded_per_dev = None
+        if need_padded:
+            padded_per_dev = ((cols.two_mk * cols.fm) * hw.lane) * n_waves
+        return latency, n_waves, padded_per_dev, True
+
+    def _staircase_core_stacked(self, cols: _LayerColumns, w: np.ndarray,
+                                need_padded: bool = True, out=None,
+                                scratch=None):
         """Stacked counterpart of ``_staircase_core`` over a (rows, C) width
         block with (rows, 1) layer-constant columns.
 
@@ -437,7 +532,16 @@ class WaveQuantizationModel:
         per-layer path skips are multiplied in uniformly (IEEE no-ops on
         the identity rows), so every element is bit-for-bit equal to the
         per-layer sweep of its row.
+
+        ``need_padded=False`` lets fused backends skip the padded-FLOPs
+        pass (latency-only callers); ``out`` receives the latency block in
+        place when given.  The numpy path always computes padded FLOPs
+        (it is an intermediate of the latency there anyway).
         """
+        if self.backend != "numpy":
+            res = self._stacked_fused(cols, w, need_padded, out, scratch)
+            if res is not None:
+                return res
         hw = self.hw
         nonneg = w.size == 0 or int(w.min()) >= 1
         per_dev = w if cols.all_so1 else -(-w // cols.shard_out)
@@ -455,7 +559,7 @@ class WaveQuantizationModel:
         else:
             bytes_per_dev = elems * cols.bits // 8
         memory_s = bytes_per_dev / hw.hbm_bandwidth
-        latency = np.maximum(compute_s, memory_s)
+        latency = np.maximum(compute_s, memory_s, out=out)
         return latency, n_waves, padded_per_dev, nonneg
 
     def latency_model_packed(
@@ -477,9 +581,14 @@ class WaveQuantizationModel:
         cols = self._stack_columns(layers)
         lat = np.empty((n_layers, n_cols), dtype=np.float64)
         rows = max(1, _STACKED_CHUNK // max(1, n_cols))
+        # per-call scratch: chunks share one set of work buffers, and
+        # nothing returned from this loop aliases them past the call
+        scratch: dict = {}
         for r0 in range(0, n_layers, rows):
             sl = slice(r0, r0 + rows)
-            lat[sl] = self._staircase_core_stacked(cols.block(sl), w2d[sl])[0]
+            self._staircase_core_stacked(
+                cols.block(sl), w2d[sl], need_padded=False, out=lat[sl],
+                scratch=scratch)
         return lat
 
     def latency_model_batch(

@@ -319,6 +319,11 @@ class TailEffectOptimizer:
         # file instead of per-layer entries: above ~64 layers the per-file
         # open cost of fine-grained entries exceeds resweeping the model.
         self.bundle_min_layers = bundle_min_layers
+        # Reused full-mode sweep matrix: every build rewrites every cell
+        # (data, start and pad columns), so reuse is purely an allocation
+        # saving — a fresh 8 MB matrix per build costs more in page
+        # faults than the sweep's own arithmetic.
+        self._w2d_buf: np.ndarray | None = None
 
     # ---- Step 1: pre-analysis -------------------------------------------
     def _build_tables(self, layers: Sequence[TunableLayer],
@@ -371,7 +376,15 @@ class TailEffectOptimizer:
             # the whole table build.
             kmax = 1 + max((int(tl.candidates.size) for tl in layers),
                            default=0)
-            w2d = np.ones((n_layers, kmax), dtype=np.int64)
+            # empty, not ones: each grid group fills its rows' data AND
+            # pad cells exactly once below (ones would touch the whole
+            # 8 MB matrix just to be overwritten)
+            if self._w2d_buf is not None \
+                    and self._w2d_buf.shape == (n_layers, kmax):
+                w2d = self._w2d_buf
+            else:
+                w2d = self._w2d_buf = np.empty((n_layers, kmax),
+                                               dtype=np.int64)
             counts = np.empty(n_layers, dtype=np.int64)
         else:
             # Latency mode: every row is the fixed 3-slot layout
@@ -393,6 +406,7 @@ class TailEffectOptimizer:
                     lo_a[pos], hi_a[pos] = 0, -1
                     if full:
                         w2d[pos, 0] = starts[pos]
+                        w2d[pos, 1:] = 1
                         counts[pos] = 1
                 continue
             if len(idxs) < 4:
@@ -416,6 +430,7 @@ class TailEffectOptimizer:
                     if full:
                         w2d[pos, :n] = cands
                         w2d[pos, n] = start_w
+                        w2d[pos, n + 1:] = 1
                         counts[pos] = n + 1
                     else:
                         if sd >= lo:
@@ -447,6 +462,7 @@ class TailEffectOptimizer:
             if full:
                 w2d[pos, :n] = cands  # one broadcast per shared grid
                 w2d[pos, n] = st
+                w2d[pos, n + 1:] = 1
                 counts[pos] = n + 1
             else:
                 d_ok = sd >= lo
@@ -488,21 +504,28 @@ class TailEffectOptimizer:
             # Deep stack: one whole-stack bundle file (per-layer entries
             # would cost one file open each — slower than resweeping).
             hw = self.model.hw
+            variant = "" if getattr(self.model, "backend", "numpy") == "numpy" \
+                else self.model.backend
             shapes = [tl.layer for tl in layers]
-            lat2d = self.cache.get_stack(hw, shapes, w2d, counts)
+            lat2d = self.cache.get_stack(hw, shapes, w2d, counts,
+                                         variant=variant)
             if lat2d is None:
                 lat2d = self.model.latency_model_packed(shapes, w2d,
                                                         counts)
-                self.cache.put_stack(hw, shapes, w2d, counts, lat2d)
+                self.cache.put_stack(hw, shapes, w2d, counts, lat2d,
+                                     variant=variant)
             lat_vecs = list(lat2d)
             lat2d_all = lat2d
         else:
+            variant = "" if getattr(self.model, "backend", "numpy") == "numpy" \
+                else self.model.backend
             if self.cache is not None:
                 hw = self.model.hw
                 for i, tl in enumerate(layers):
                     if lat_vecs[i] is None:
                         hit = self.cache.get(hw, tl.layer,
-                                             w2d[i, :counts[i]])
+                                             w2d[i, :counts[i]],
+                                             variant=variant)
                         if hit is not None and "latency_s" in hit:
                             lat_vecs[i] = hit["latency_s"]
             miss = [i for i, v in enumerate(lat_vecs) if v is None]
@@ -524,7 +547,8 @@ class TailEffectOptimizer:
                     for i in miss:
                         k = int(counts[i])
                         self.cache.put(hw, layers[i].layer, w2d[i, :k],
-                                       {"latency_s": lat_vecs[i][:k]})
+                                       {"latency_s": lat_vecs[i][:k]},
+                                       variant=variant)
 
         tables = []
         counts_l = counts.tolist()

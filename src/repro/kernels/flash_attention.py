@@ -81,7 +81,13 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scale = 1.0 / math.sqrt(dh)
     bq = min(block_q, sq)
     bkv = min(block_kv, skv)
-    assert sq % bq == 0 and skv % bkv == 0, (sq, skv, bq, bkv)
+    if sq % bq or skv % bkv:
+        raise ValueError(
+            f"flash_attention_pallas needs block-divisible sequences: "
+            f"(Sq, Skv)=({sq}, {skv}) is not divisible by blocks "
+            f"({bq}, {bkv}) (requested ({block_q}, {block_kv}), clamped to"
+            f" the dims). Pad the sequences up to block multiples — "
+            f"ops.flash_attention pads causal/local shapes automatically.")
 
     # layout: fold heads into batch; kv heads repeat via index mapping
     qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)

@@ -46,8 +46,13 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, block_m: int = 256,
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
-        (m, n, k, bm, bn, bk)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"matmul_pallas needs block-divisible dims: (M, N, K)="
+            f"({m}, {n}, {k}) is not divisible by blocks ({bm}, {bn}, {bk})"
+            f" (requested ({block_m}, {block_n}, {block_k}), clamped to the"
+            f" dims). Pad M/N/K up to block multiples and slice the output"
+            f" — ops.matmul does this automatically.")
     gm, gn, gk = m // bm, n // bn, k // bk
 
     return pl.pallas_call(

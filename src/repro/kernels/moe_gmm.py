@@ -44,8 +44,13 @@ def moe_gmm_pallas(x: jax.Array, w: jax.Array, *, block_c: int = 128,
     e2, d2, f = w.shape
     assert e == e2 and d == d2, (x.shape, w.shape)
     bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
-    assert c % bc == 0 and f % bf == 0 and d % bd == 0, \
-        (c, f, d, bc, bf, bd)
+    if c % bc or f % bf or d % bd:
+        raise ValueError(
+            f"moe_gmm_pallas needs block-divisible dims: (C, F, D)="
+            f"({c}, {f}, {d}) is not divisible by blocks ({bc}, {bf}, {bd})"
+            f" (requested ({block_c}, {block_f}, {block_d}), clamped to the"
+            f" dims). Pad C/F/D up to block multiples and slice the output"
+            f" — ops.moe_gmm does this automatically.")
     grid = (e, c // bc, f // bf, d // bd)
 
     return pl.pallas_call(

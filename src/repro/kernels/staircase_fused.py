@@ -1,0 +1,247 @@
+"""Fused staircase sweep — the full-candidate table build as ONE kernel.
+
+The accuracy-mode table build (``tail_optimizer._build_tables(full=True)``)
+evaluates the Eq. 3 staircase for every layer x every candidate width.  The
+NumPy engine makes ~10 elementwise passes over the (layers, candidates)
+matrix — wave count, tile padding, padded FLOPs, byte counts, the
+compute/memory roofline combine — so at 1024x1024 it is ALU/memory-pass
+bound, not math bound.  This module collapses the whole sweep into one
+fused evaluation of an affine-in-waves form.
+
+The algebra: for a fixed layer, every staircase quantity is a function of
+the wave count alone,
+
+    n_waves    = ceil(ceil(width / shard_out) / lane)          (Eq. 3 ceil)
+    compute_s  = ca * n_waves        ca = 2 * m_pad * k_pad * fm * lane / peak
+    memory_s   = mb * n_waves + mc   mb = (k_pad + m_pad) * bytes/elem * lane / bw
+                                     mc = m_pad * k_pad * bytes/elem / bw
+    latency    = max(compute_s, memory_s)
+
+so the per-layer constants fold into three coefficient columns (``ca``,
+``mb``, ``mc``) and the sweep is: one ceil-div, two multiplies, one add,
+one max — a single fused pass instead of ten.  ``fused_coeffs`` derives
+the columns, ``fused_latency`` is the NumPy evaluation (float64, within a
+few ulp of the reference ``WaveQuantizationModel`` math — the rounding
+order differs by the factoring), and ``staircase_fused_pallas`` is the
+same body as a Pallas TPU kernel (float32 on hardware; interpret mode
+executes it anywhere, which is what the differential tests in
+``tests/test_staircase_fused.py`` run).  ``kernels.ops.staircase_latency``
+dispatches between them.
+
+This module stays importable without jax: the Pallas path imports jax
+lazily, so ``core.tail_model``'s ``backend="fused"`` NumPy path adds no
+jax dependency to the optimizer's table build.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+
+__all__ = [
+    "fused_coeffs", "fused_columns", "fused_latency",
+    "fused_staircase_reference", "staircase_fused_pallas",
+]
+
+
+def fused_coeffs(hw: HardwareSpec, *, two_mk, mk, k_plus_m, fm, bits):
+    """Per-layer staircase constants -> affine-in-waves coefficients.
+
+    Accepts scalars or broadcastable arrays (e.g. the (L, 1) columns of
+    ``tail_model._LayerColumns``).  ``bits`` must be byte-aligned — the
+    exact integer ``elems * bits // 8`` of the reference path only
+    factors per-element when ``bits % 8 == 0``.
+    """
+    bpe = bits // 8
+    ca = (two_mk * fm / hw.peak_flops_bf16) * hw.lane
+    mb = (k_plus_m * bpe / hw.hbm_bandwidth) * hw.lane
+    mc = (mk * bpe) / hw.hbm_bandwidth
+    return ca, mb, mc
+
+
+def fused_columns(hw: HardwareSpec, layers):
+    """(shard_out, ca, mb, mc) as (L, 1) columns for a list of
+    ``LayerShape``-like objects (tokens / d_in / shard_in / shard_out /
+    dtype_bits / flop_multiplier attributes)."""
+    def col(vals, dtype):
+        return np.asarray(vals, dtype=dtype)[:, None]
+
+    tokens = col([l.tokens for l in layers], np.int64)
+    d_in = col([l.d_in for l in layers], np.int64)
+    shard_in = col([l.shard_in for l in layers], np.int64)
+    shard_out = col([l.shard_out for l in layers], np.int64)
+    bits = col([l.dtype_bits for l in layers], np.int64)
+    fm = col([l.flop_multiplier for l in layers], np.float64)
+    sub = np.where(bits >= 32, hw.sublane_fp32, hw.sublane_bf16)
+    m_pad = -(-tokens // sub) * sub
+    k_pad = -(-(-(-d_in // shard_in)) // hw.lane) * hw.lane
+    ca, mb, mc = fused_coeffs(hw, two_mk=(2.0 * m_pad) * k_pad,
+                              mk=m_pad * k_pad, k_plus_m=k_pad + m_pad,
+                              fm=fm, bits=bits)
+    return shard_out, ca, mb, mc
+
+
+def _scratch_buf(scratch, key, shape, dtype):
+    if scratch is None:
+        return np.empty(shape, dtype)
+    buf = scratch.get(key)
+    if buf is None or buf.shape != shape:
+        buf = scratch[key] = np.empty(shape, dtype)
+    return buf
+
+
+def fused_latency(w, shard_out, ca, mb, mc, *, lane: int,
+                  all_so1: bool = False, out=None, scratch=None,
+                  need_waves: bool = True):
+    """One fused pass: latency + wave counts over a width array.
+
+    ``w`` is int64 (any shape); ``shard_out``/``ca``/``mb``/``mc`` are
+    scalars or columns broadcastable against it.  Widths must be
+    nonnegative (callers with signed sweeps use the reference path).
+    Returns ``(latency, n_waves)``; ``out`` receives the latency when
+    given (one fewer copy in the chunked table build).
+
+    ``scratch`` (a dict) reuses the integer/float work buffers across
+    same-shaped calls — the chunked table build allocates twice per
+    BUILD instead of twice per chunk.  The returned ``n_waves`` aliases
+    scratch memory, so only pass ``scratch`` when it does not outlive
+    the next call.
+
+    ``need_waves=False`` lets latency-only callers skip the integer
+    wave array entirely (``n_waves`` comes back None): for unsharded
+    stacks on a power-of-two lane, ``ceil(w / lane)`` is computed in
+    float64 directly — the division is exact (power-of-two divisor,
+    ``w < 2**53``), so the latencies are bit-identical to the integer
+    route at two fewer memory passes.
+    """
+    if (not need_waves and all_so1 and lane & (lane - 1) == 0
+            and int(w.max()) < 2 ** 53):
+        nwf = _scratch_buf(scratch, "nwf", w.shape, np.float64)
+        np.multiply(w, 1.0 / lane, out=nwf)
+        np.ceil(nwf, out=nwf)
+        nw = None
+    else:
+        nw = _scratch_buf(scratch, "nw", w.shape, np.int64)
+        if all_so1:
+            np.add(w, lane - 1, out=nw)
+        else:
+            np.negative(w, out=nw)           # ceil_div, nonneg
+            np.floor_divide(nw, shard_out, out=nw)
+            np.negative(nw, out=nw)
+            nw += lane - 1
+        if lane & (lane - 1) == 0:
+            np.right_shift(nw, lane.bit_length() - 1, out=nw)
+        else:
+            np.floor_divide(nw, lane, out=nw)
+        # one int64 -> float64 conversion shared by both affine terms
+        # (the naive ``ca * nw`` / ``mb * nw`` pair converts twice)
+        nwf = _scratch_buf(scratch, "nwf", nw.shape, np.float64)
+        np.copyto(nwf, nw)
+    if out is None:
+        out = np.empty(nwf.shape, np.float64)
+    np.multiply(ca, nwf, out=out)
+    nwf *= mb
+    nwf += mc
+    lat = np.maximum(out, nwf, out=out)
+    return lat, nw
+
+
+def fused_staircase_reference(widths, shard_out, ca, mb, mc, *, lane: int):
+    """NumPy float64 reference for the Pallas kernel: (latency, waves,
+    tail occupancy) over a (rows, C) width matrix with (rows, 1)
+    coefficient columns.  Occupancy is the fraction of the last wave's
+    lanes doing useful work: ``per_dev / (n_waves * lane)``."""
+    w = np.asarray(widths, dtype=np.int64)
+    so = np.asarray(shard_out, dtype=np.int64)
+    per_dev = -(-w // so)
+    n_waves = -(-per_dev // lane)
+    latency = np.maximum(ca * n_waves, mb * n_waves + mc)
+    occupancy = per_dev / (n_waves * lane)
+    return latency, n_waves, occupancy
+
+
+@functools.lru_cache(maxsize=8)
+def _pallas_fn(lane: int, block_r: int, block_c: int, interpret: bool):
+    """Build (and cache) the jit'd pallas_call for one (lane, block)
+    configuration.  jax is imported here, not at module scope."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(w_ref, so_ref, ca_ref, mb_ref, mc_ref,
+               lat_ref, wv_ref, occ_ref):
+        w = w_ref[...]
+        so = so_ref[...]
+        per_dev = -(-w // so)
+        nw = -(-per_dev // lane)
+        nwf = nw.astype(jnp.float32)
+        lat_ref[...] = jnp.maximum(ca_ref[...] * nwf,
+                                   mb_ref[...] * nwf + mc_ref[...])
+        wv_ref[...] = nw
+        occ_ref[...] = per_dev.astype(jnp.float32) / (nwf * lane)
+
+    @jax.jit
+    def call(w, so, ca, mb, mc):
+        rows, cols = w.shape
+        grid = (rows // block_r, cols // block_c)
+        row_spec = pl.BlockSpec((block_r, 1), lambda i, j: (i, 0))
+        full_spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[full_spec, row_spec, row_spec, row_spec, row_spec],
+            out_specs=[full_spec, full_spec, full_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+                jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+                jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            ],
+            interpret=interpret,
+        )(w, so, ca, mb, mc)
+
+    return call
+
+
+def staircase_fused_pallas(widths, shard_out, ca, mb, mc, *, lane: int,
+                           block_r: int = 8, block_c: int = 128,
+                           interpret: bool = False):
+    """The fused staircase sweep as a single Pallas kernel.
+
+    ``widths``: (L, C) nonnegative ints; ``shard_out``/``ca``/``mb``/
+    ``mc``: (L, 1) columns.  Inputs are padded up to block multiples
+    (pad cells evaluate a harmless width-1/shard-1 staircase and are
+    sliced off).  Returns float32/int32/float32 NumPy arrays
+    (latency, waves, occupancy) — fp32 is what the TPU VPU computes;
+    the fp64 ground truth is ``fused_staircase_reference``.
+    """
+    import numpy as _np
+
+    w = _np.asarray(widths, dtype=_np.int32)
+    if w.ndim != 2:
+        raise ValueError(f"widths must be 2-D (layers, candidates), "
+                         f"got shape {w.shape}")
+    rows, cols = w.shape
+    so = _np.broadcast_to(_np.asarray(shard_out, dtype=_np.int32),
+                          (rows, 1))
+    ca32 = _np.broadcast_to(_np.asarray(ca, dtype=_np.float32), (rows, 1))
+    mb32 = _np.broadcast_to(_np.asarray(mb, dtype=_np.float32), (rows, 1))
+    mc32 = _np.broadcast_to(_np.asarray(mc, dtype=_np.float32), (rows, 1))
+
+    pr = (-rows) % block_r
+    pc = (-cols) % block_c
+    if pr or pc:
+        w = _np.pad(w, ((0, pr), (0, pc)), constant_values=1)
+        so = _np.pad(so, ((0, pr), (0, 0)), constant_values=1)
+        ca32 = _np.pad(ca32, ((0, pr), (0, 0)))
+        mb32 = _np.pad(mb32, ((0, pr), (0, 0)))
+        mc32 = _np.pad(mc32, ((0, pr), (0, 0)))
+
+    call = _pallas_fn(int(lane), block_r, block_c, interpret)
+    lat, waves, occ = call(w, so, ca32, mb32, mc32)
+    lat = _np.asarray(lat)[:rows, :cols]
+    waves = _np.asarray(waves)[:rows, :cols]
+    occ = _np.asarray(occ)[:rows, :cols]
+    return lat, waves, occ

@@ -7,8 +7,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
-# full XLA compiles: quick tier skips with -m "not slow"
-pytestmark = pytest.mark.slow
+# full XLA compiles: quick tier skips with -m "not slow"; the kernels CI
+# tier runs this file (plus the staircase differential + autotuner
+# suites) with -m kernels.
+pytestmark = [pytest.mark.slow, pytest.mark.kernels]
 
 KEY = jax.random.PRNGKey(0)
 
@@ -113,3 +115,152 @@ class TestMoeGMM:
         np.testing.assert_allclose(
             out.astype(jnp.float32), expect.astype(jnp.float32),
             rtol=TOL[dtype], atol=TOL[dtype] * 8)
+
+
+class TestTileBoundaries:
+    """Shapes exactly one element over/under block edges: the partial
+    last tile is where the tail effect lives, and where padding bugs
+    hide.  All dims one-over force the pad path; one-under exercises the
+    clamp-to-dim path."""
+
+    @pytest.mark.parametrize("m,n,k", [(63, 65, 64), (65, 63, 63),
+                                       (64, 64, 65), (127, 129, 128),
+                                       (129, 127, 127), (65, 65, 65)])
+    def test_matmul_edges(self, m, n, k):
+        x, w = rand(1, (m, k), jnp.float32), rand(2, (k, n), jnp.float32)
+        out = ops.matmul(x, w, block_m=64, block_n=64, block_k=64,
+                         force="pallas_interpret")
+        np.testing.assert_allclose(out, ref.matmul_ref(x, w),
+                                   rtol=2e-4, atol=2e-3)
+
+    @pytest.mark.parametrize("mask,window", [("causal", 0), ("local", 48)])
+    @pytest.mark.parametrize("s", [63, 65, 127, 129])
+    def test_flash_edges(self, mask, window, s):
+        q = rand(1, (1, s, 4, 32), jnp.float32)
+        k = rand(2, (1, s, 2, 32), jnp.float32)
+        v = rand(3, (1, s, 2, 32), jnp.float32)
+        out = ops.flash_attention(q, k, v, mask_kind=mask, window=window,
+                                  block_q=64, block_kv=64,
+                                  force="pallas_interpret")
+        expect = ref.attention_ref(q, k, v, mask_kind=mask, window=window)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+    def test_flash_unmasked_cannot_pad_kv(self):
+        q = rand(1, (1, 64, 4, 32), jnp.float32)
+        k = rand(2, (1, 65, 2, 32), jnp.float32)
+        v = rand(3, (1, 65, 2, 32), jnp.float32)
+        with pytest.raises(ValueError, match="mask_kind"):
+            ops.flash_attention(q, k, v, mask_kind="none", block_q=64,
+                                block_kv=64, force="pallas_interpret")
+
+    @pytest.mark.parametrize("e,c,d,f", [(2, 33, 31, 32), (1, 31, 33, 33),
+                                         (2, 65, 64, 63)])
+    def test_moe_edges(self, e, c, d, f):
+        x = rand(1, (e, c, d), jnp.float32)
+        w = rand(2, (e, d, f), jnp.float32)
+        out = ops.moe_gmm(x, w, block_c=32, block_f=32, block_d=32,
+                          force="pallas_interpret")
+        np.testing.assert_allclose(out, ref.moe_gmm_ref(x, w),
+                                   rtol=2e-4, atol=2e-3)
+
+
+class TestPaddedTailInvariant:
+    """Zero-padded lanes must contribute EXACTLY zero: accumulating a
+    0 * 0 tile is an IEEE no-op, so the padded kernel run is bit-identical
+    to the unpadded one on the valid region, and exactly 0 outside it."""
+
+    def test_matmul_padded_lanes_exact_zero(self):
+        from repro.kernels.matmul_tiled import matmul_pallas
+        m, n, k, b = 100, 120, 70, 64
+        x, w = rand(1, (m, k), jnp.float32), rand(2, (k, n), jnp.float32)
+        pad = lambda d: (-d) % b
+        xp = jnp.pad(x, ((0, pad(m)), (0, pad(k))))
+        wp = jnp.pad(w, ((0, pad(k)), (0, pad(n))))
+        out = matmul_pallas(xp, wp, block_m=b, block_n=b, block_k=b,
+                            interpret=True)
+        assert np.all(np.asarray(out[m:, :]) == 0.0)
+        assert np.all(np.asarray(out[:, n:]) == 0.0)
+        # Garbage in x's padded K lanes times w's zero rows must be
+        # bit-identical to zeros-times-zeros padding: the padded lanes
+        # contribute exactly 0.0 to the accumulator either way.
+        xg = xp.at[:, k:].set(1e6)
+        alt = matmul_pallas(xg, wp, block_m=b, block_n=b, block_k=b,
+                            interpret=True)
+        assert np.array_equal(np.asarray(out), np.asarray(alt))
+        np.testing.assert_allclose(np.asarray(out[:m, :n]),
+                                   np.asarray(ref.matmul_ref(x, w)),
+                                   rtol=2e-4, atol=2e-3)
+
+    def test_moe_padded_d_exact_noop(self):
+        from repro.kernels.moe_gmm import moe_gmm_pallas
+        e, c, d, f, b = 2, 64, 96, 64, 32
+        x = rand(1, (e, c, d), jnp.float32)
+        w = rand(2, (e, d, f), jnp.float32)
+        xp = jnp.pad(x, ((0, 0), (0, 0), (0, 32)))
+        wp = jnp.pad(w, ((0, 0), (0, 32), (0, 0)))
+        out = moe_gmm_pallas(xp, wp, block_c=b, block_f=b, block_d=b,
+                             interpret=True)
+        base = moe_gmm_pallas(x, w, block_c=b, block_f=b, block_d=b,
+                              interpret=True)
+        assert np.array_equal(np.asarray(out), np.asarray(base))
+
+    def test_flash_padded_kv_is_masked_out(self):
+        """Causal padding appends kv positions strictly in the future of
+        every real query row — the padded output must equal the unpadded
+        kernel run on the same blocks."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        s, b = 128, 64
+        q = rand(1, (1, s, 4, 32), jnp.float32)
+        k = rand(2, (1, s, 2, 32), jnp.float32)
+        v = rand(3, (1, s, 2, 32), jnp.float32)
+        qp = jnp.pad(q, ((0, 0), (0, b), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, b), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, b), (0, 0), (0, 0)))
+        out = flash_attention_pallas(qp, kp, vp, mask_kind="causal",
+                                     block_q=b, block_kv=b,
+                                     interpret=True)[:, :s]
+        base = flash_attention_pallas(q, k, v, mask_kind="causal",
+                                      block_q=b, block_kv=b,
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestDivisibilityErrors:
+    """The silent min(block, dim) clamp used to trip a bare assert on
+    non-divisible shapes; now each kernel raises a padding-hint error."""
+
+    def test_matmul_pallas_clear_error(self):
+        from repro.kernels.matmul_tiled import matmul_pallas
+        x, w = rand(1, (100, 64), jnp.float32), rand(2, (64, 64),
+                                                     jnp.float32)
+        with pytest.raises(ValueError, match="[Pp]ad"):
+            matmul_pallas(x, w, block_m=64, block_n=64, block_k=64,
+                          interpret=True)
+
+    def test_flash_pallas_clear_error(self):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = rand(1, (1, 100, 4, 32), jnp.float32)
+        k = rand(2, (1, 100, 2, 32), jnp.float32)
+        v = rand(3, (1, 100, 2, 32), jnp.float32)
+        with pytest.raises(ValueError, match="[Pp]ad"):
+            flash_attention_pallas(q, k, v, block_q=64, block_kv=64,
+                                   interpret=True)
+
+    def test_moe_pallas_clear_error(self):
+        from repro.kernels.moe_gmm import moe_gmm_pallas
+        x = rand(1, (2, 100, 64), jnp.float32)
+        w = rand(2, (2, 64, 64), jnp.float32)
+        with pytest.raises(ValueError, match="[Pp]ad"):
+            moe_gmm_pallas(x, w, block_c=64, block_f=64, block_d=64,
+                           interpret=True)
+
+    @pytest.mark.parametrize("m,n,k", [(100, 130, 70)])
+    def test_ops_matmul_pad_path_regression(self, m, n, k):
+        """ops.matmul must absorb non-divisible shapes (the pad path) —
+        both with explicit blocks and with the defaults."""
+        x, w = rand(1, (m, k), jnp.float32), rand(2, (k, n), jnp.float32)
+        expect = ref.matmul_ref(x, w)
+        for kwargs in ({"block_m": 64, "block_n": 64, "block_k": 64}, {}):
+            out = ops.matmul(x, w, force="pallas_interpret", **kwargs)
+            np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-3)
