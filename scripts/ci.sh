@@ -40,6 +40,9 @@ esac
 if [[ "$tier" == "all" || "$tier" == "quick" ]]; then
   echo "== quick tier =="
   python -m pytest -q -m "not slow"
+  # AOT compile-cache smoke: a warmed serving run must cross a width
+  # boundary with zero jit traces (trace-counting hook asserts inside).
+  python scripts/compile_cache_smoke.py
 fi
 
 if [[ "$tier" == "all" || "$tier" == "chaos" ]]; then

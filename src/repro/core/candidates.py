@@ -170,3 +170,19 @@ def snap_nearest(candidates: np.ndarray, width: int) -> int:
     """Nearest candidate (used by pruning-space discretization, section 4.4)."""
     idx = int(np.argmin(np.abs(candidates - width)))
     return int(candidates[idx])
+
+
+def kernel_tail_free(hw, tokens: int, d_in: int, width: int, *,
+                     dtype_bits: int = 16, cache=None) -> bool:
+    """True when the autotuned matmul grid for a (tokens x d_in) @ (d_in
+    x width) projection lands on a full-wave boundary (paper Eq. 3: no
+    partial wave, no padded tail).  This is the *kernel-level* tail
+    check — the staircase model scores the layer, this scores the tile
+    grid the layer would actually run on — and is what
+    ``ServingWidthPlanner``/``DegradationLadder`` use to prefer widths
+    whose executables waste no wave.  Memoized per (hw, shape) by the
+    autotuner."""
+    from repro.kernels.autotune import autotune_matmul
+    cfg = autotune_matmul(hw, int(tokens), int(width), int(d_in),
+                          dtype_bits=dtype_bits, cache=cache)
+    return bool(cfg.tail_free)

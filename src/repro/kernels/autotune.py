@@ -57,7 +57,7 @@ from repro.core.table_cache import ProfileTableCache, hardware_fingerprint
 
 __all__ = [
     "TileConfig", "autotune_matmul", "autotune_flash_attention",
-    "autotune_moe_gmm", "clear_memo",
+    "autotune_moe_gmm", "clear_memo", "memo_stats",
 ]
 
 # Candidate block edges. Multiples of the MXU/VPU tiles (8 sublanes x 128
@@ -87,6 +87,20 @@ _MEMO: dict = {}
 
 def clear_memo() -> None:
     _MEMO.clear()
+
+
+def memo_stats() -> dict:
+    """Observability for the in-process memo: entry counts per kernel
+    and how many memoized grids are tail-free.  The serving layer (width
+    planner tail-preference, compile-cache smoke) reports these to show
+    the autotuner is being consulted, not re-run."""
+    per_kernel: dict[str, int] = {}
+    tail_free = 0
+    for (_, kernel, _, _), cfg in _MEMO.items():
+        per_kernel[kernel] = per_kernel.get(kernel, 0) + 1
+        tail_free += bool(cfg.tail_free)
+    return {"entries": len(_MEMO), "tail_free": tail_free,
+            "per_kernel": per_kernel}
 
 
 def _select(cands: Sequence[TileConfig]) -> TileConfig:

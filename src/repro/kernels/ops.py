@@ -14,7 +14,9 @@ via ``cache=``).  With neither, the historical fixed defaults apply.
 
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+import dataclasses
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +39,61 @@ def _mode(force: Optional[str]) -> str:
     return "pallas" if _on_tpu() else "ref"
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelContext:
+    """Ambient tile-selection state for model code that cannot thread
+    ``hw=``/``cache=``/``force=`` through every call site (e.g. the
+    transformer forward traced inside a serving jit).  Installed with
+    :func:`kernel_context`; the dispatch wrappers below fall back to it
+    whenever their own hw/cache/force arguments are left unset."""
+
+    hw: Any = None
+    cache: Any = None
+    force: Optional[str] = None
+
+
+_KERNEL_CTX: Optional[KernelContext] = None
+
+
+def get_kernel_context() -> Optional[KernelContext]:
+    return _KERNEL_CTX
+
+
+def kernel_routing_active() -> bool:
+    """True when an installed kernel context would actually reach a
+    kernel backend.  In ref mode the wrappers route to the jnp reference
+    paths, whose numerics differ from the models' native einsum code —
+    callers must keep their historical path then, so a context on a
+    CPU-only run is inert by construction."""
+    ctx = _KERNEL_CTX
+    return ctx is not None and _mode(ctx.force) != "ref"
+
+
+@contextlib.contextmanager
+def kernel_context(hw=None, cache=None, force: Optional[str] = None):
+    """Install a :class:`KernelContext` for the duration of the block.
+    Trace-time scoping: model code traced under this context bakes the
+    context's tile choices into the jaxpr, so an AOT-compiled executable
+    keeps its autotuned blocks forever."""
+    global _KERNEL_CTX
+    prev = _KERNEL_CTX
+    _KERNEL_CTX = KernelContext(hw=hw, cache=cache, force=force)
+    try:
+        yield _KERNEL_CTX
+    finally:
+        _KERNEL_CTX = prev
+
+
+def _ctx_fallback(hw, cache, force):
+    """Fill unset hw/cache/force from the ambient context, if any."""
+    ctx = _KERNEL_CTX
+    if ctx is None:
+        return hw, cache, force
+    return (hw if hw is not None else ctx.hw,
+            cache if cache is not None else ctx.cache,
+            force if force is not None else ctx.force)
+
+
 def _dtype_bits(x) -> int:
     return jnp.asarray(x).dtype.itemsize * 8
 
@@ -46,6 +103,7 @@ def matmul(x, w, *, block_m: Optional[int] = None,
            hw=None, cache=None, force: Optional[str] = None):
     """Tile-quantized matmul.  Pads M/N/K up to block multiples — the pad
     FLOPs are the tail the width optimizer removes by resizing N."""
+    hw, cache, force = _ctx_fallback(hw, cache, force)
     mode = _mode(force)
     if mode == "ref":
         return ref_lib.matmul_ref(x, w)
@@ -80,6 +138,7 @@ def flash_attention(q, k, v, *, mask_kind: str = "causal", window: int = 0,
     causal/local masks (trailing padded kv positions are masked out by
     position, padded q rows are sliced off — exact); an unmasked
     attention cannot pad kv, so non-divisible Skv raises there."""
+    hw, cache, force = _ctx_fallback(hw, cache, force)
     mode = _mode(force)
     if mode == "ref":
         from repro.models.attention import chunked_attention
@@ -144,6 +203,7 @@ def moe_gmm(x, w, *, block_c: Optional[int] = None,
             hw=None, cache=None, force: Optional[str] = None):
     """Grouped expert matmul.  Pads C/F/D up to block multiples (padded
     rows/cols are sliced off; padded D lanes contribute exact zeros)."""
+    hw, cache, force = _ctx_fallback(hw, cache, force)
     mode = _mode(force)
     if mode == "ref":
         return ref_lib.moe_gmm_ref(x, w)

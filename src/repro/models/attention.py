@@ -185,6 +185,22 @@ def chunked_attention(
     return o.astype(COMPUTE_DTYPE)
 
 
+def prefill_attention(q, k, v, *, mask_kind: str = "causal",
+                      window: int = 0) -> jax.Array:
+    """Prefill attention through the ambient kernel context.
+
+    When a ``kernels.ops.kernel_context`` is installed and would reach a
+    kernel backend (TPU or ``force='pallas_interpret'``), causal prefill
+    routes through ``ops.flash_attention`` so it runs on the autotuned
+    wave-aligned tiles of the context's hardware spec.  Otherwise — the
+    historical CPU/ref path — this is exactly ``chunked_attention``."""
+    from repro.kernels import ops
+    if mask_kind == "causal" and ops.kernel_routing_active():
+        return ops.flash_attention(q, k, v, mask_kind="causal",
+                                   window=window)
+    return chunked_attention(q, k, v, mask_kind=mask_kind, window=window)
+
+
 def local_attention_prefill(q, k, v, *, window: int, q_offset: int = 0,
                             q_chunk: int = 1024) -> jax.Array:
     """Sliding-window attention that only touches the window's KV chunks.

@@ -129,6 +129,9 @@ def init_mlp(key, d_model: int, d_ff: int, gated: bool, bias: bool = False
 
 
 def apply_mlp(p: dict, x: jax.Array, gated: bool) -> jax.Array:
+    from repro.kernels import ops
+    if ops.kernel_routing_active():
+        return _apply_mlp_kernels(p, x, gated)
     up = jnp.einsum("...d,df->...f", x, cast(p["w_up"]))
     if "b_up" in p:
         up = up + cast(p["b_up"])
@@ -142,6 +145,28 @@ def apply_mlp(p: dict, x: jax.Array, gated: bool) -> jax.Array:
     if "b_down" in p:
         out = out + cast(p["b_down"])
     return shard(out, "batch", "seq", "embed")
+
+
+def _apply_mlp_kernels(p: dict, x: jax.Array, gated: bool) -> jax.Array:
+    """MLP on the tiled matmul kernel (ambient kernel context active):
+    the token axes flatten to M so every projection runs on the
+    autotuned wave-aligned (block_m, block_n, block_k) grid."""
+    from repro.kernels import ops
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    up = ops.matmul(x2, cast(p["w_up"]))
+    if "b_up" in p:
+        up = up + cast(p["b_up"])
+    if gated:
+        g = ops.matmul(x2, cast(p["w_gate"]))
+        h = jax.nn.silu(g) * up
+    else:
+        h = jax.nn.gelu(up)
+    out = ops.matmul(h.astype(x.dtype), cast(p["w_down"]))
+    if "b_down" in p:
+        out = out + cast(p["b_down"])
+    return shard(out.reshape(*lead, out.shape[-1]),
+                 "batch", "seq", "embed")
 
 
 # ---------------------------------------------------------------------------

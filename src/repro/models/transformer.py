@@ -230,7 +230,10 @@ def _self_attention(p, x, cfg: ModelConfig, kind: str, mode: str,
     if kind == "local":
         o = attn_lib.local_attention_prefill(q, k, v, window=cfg.window)
     elif causal:
-        o = attn_lib.chunked_attention(q, k, v, mask_kind="causal")
+        # Routes through ops.flash_attention (autotuned wave-aligned
+        # tiles) when a kernels.ops.kernel_context is active; plain
+        # chunked_attention otherwise.
+        o = attn_lib.prefill_attention(q, k, v, mask_kind="causal")
     else:
         o = attn_lib.chunked_attention(q, k, v, mask_kind="none")
     y = attn_lib.out_proj(p, o)

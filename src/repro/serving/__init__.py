@@ -11,6 +11,10 @@ from repro.serving.degradation import (
 from repro.serving.continuous import (
     Arrival, BoundaryEvent, ContinuousServeEngine, Ledger,
 )
+from repro.serving.compile_cache import (
+    COMPILE_STEPS, CompileEvent, TraceCounter, WidthVariantCompileCache,
+    pow2_bucket, realized_exec_key,
+)
 from repro.serving import chaos
 
 __all__ = ["AdmissionControl", "BatchStats", "Request", "Result",
@@ -18,4 +22,7 @@ __all__ = ["AdmissionControl", "BatchStats", "Request", "Result",
            "WidthPlan", "SWAP_STEPS", "SwapEvent", "WidthSwapper",
            "serving_templates", "DegradationController",
            "DegradationLadder", "LadderRung", "Shift", "Arrival",
-           "BoundaryEvent", "ContinuousServeEngine", "Ledger", "chaos"]
+           "BoundaryEvent", "ContinuousServeEngine", "Ledger",
+           "COMPILE_STEPS", "CompileEvent", "TraceCounter",
+           "WidthVariantCompileCache", "pow2_bucket",
+           "realized_exec_key", "chaos"]

@@ -130,6 +130,43 @@ class ReshapeFailureInjector:
                 f"injected KV-reshape failure #{self.injected}")
 
 
+class CompileFailureInjector:
+    """Seeded ``WidthVariantCompileCache.fault_hook`` — faults the AOT
+    executable layer of a boundary crossing.
+
+    ``steps`` selects which ``compile_cache.COMPILE_STEPS`` checkpoints
+    can fire: ``"lower"``/``"compile"`` break plan-time AOT compilation
+    (the cache entry is never built), ``"lookup"`` breaks the serve-time
+    executable fetch (a warm entry becomes unreachable).  In every case
+    the cache's contract is to fall back to the ordinary traced jit path
+    — requests must finish with identical tokens and zero losses, which
+    is what the chaos tier asserts.
+    """
+
+    def __init__(self, rate: float, *, seed: int = 0,
+                 steps: Sequence[str] = ("lookup",)):
+        from repro.serving.compile_cache import COMPILE_STEPS
+        for s in steps:
+            if s not in COMPILE_STEPS:
+                raise ValueError(f"unknown compile step {s!r}; expected "
+                                 f"a subset of {COMPILE_STEPS}")
+        self.rate = float(rate)
+        self.steps = tuple(steps)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # matching-step evaluations
+        self.injected = 0       # faults actually raised
+
+    def __call__(self, step: str) -> None:
+        if step not in self.steps:
+            return
+        self.calls += 1
+        if self.rng.random() < self.rate:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected compile-cache failure #{self.injected} "
+                f"at {step!r}")
+
+
 class SlowBatchInjector:
     """Seeded straggler batches: wraps a base batch cost, adding
     ``extra_s`` with probability ``rate`` per batch."""

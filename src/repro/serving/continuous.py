@@ -146,7 +146,10 @@ class ContinuousServeEngine:
                  planner=None, swapper=None, admission=None, degrader=None,
                  clock: Callable[[], float] = time.monotonic,
                  batch_cost_fn=None, max_retries: int = 2,
-                 boundary_every: int = 4, boundary_cooldown: int = 8):
+                 boundary_every: int = 4, boundary_cooldown: int = 8,
+                 compile_cache=None,
+                 prefill_bucketing: Optional[bool] = None,
+                 prefill_bucket_min: int = 8):
         if cfg.is_encdec:
             raise ValueError("continuous batching supports decoder-only "
                              "models (no cross-attention cache rewrite)")
@@ -179,8 +182,36 @@ class ContinuousServeEngine:
         n_refs = len(tfm.decoder_layer_refs(cfg))
         self._full_heads = np.full(n_refs, cfg.n_heads, dtype=np.int64)
         self._heads_active = self._full_heads.copy()
+        # Head counts defining the KV-cache SHAPES, which differ from
+        # `_heads_active` (the effective head values) exactly when the
+        # active plan is realized as a zero-mask: masked params keep
+        # canonical shapes, so reshape_states must source from the shape
+        # vector while grow-detection compares effective values.
+        self._shape_heads = self._full_heads.copy()
+        self._masked_active = False
         self._plan_active: Optional[WidthPlan] = None
         self._key_active: Optional[tuple] = None
+
+        # Prefill length bucketing: pow2-pad join prefills so the number
+        # of distinct prefill shapes (jit traces / AOT executables) is
+        # bounded by log2(max_len), not one per distinct prompt length.
+        # Exact only for pure global-causal-attention dense stacks:
+        # local-attention ring caches rotate by the *total* prefill
+        # length and recurrent/MoE-capacity layers see the padded rows,
+        # so bucketing is refused there.  Default: on when a compile
+        # cache is attached (the cache is why bucket count matters).
+        bucket_ok = not cfg.moe and all(
+            kind == "attn" for kind, _ in tfm.layer_plan(cfg))
+        if prefill_bucketing is None:
+            self.prefill_bucketing = compile_cache is not None and bucket_ok
+        elif prefill_bucketing and not bucket_ok:
+            raise ValueError(
+                "prefill_bucketing requires a pure global-attention "
+                "dense decoder (local/recurrent layers and MoE capacity "
+                "are length-sensitive)")
+        else:
+            self.prefill_bucketing = bool(prefill_bucketing)
+        self.prefill_bucket_min = max(int(prefill_bucket_min), 1)
 
         # Slot state: one shared decode pytree + per-slot positions.
         self.states = tfm.init_decode_state(cfg, self.slots, self.max_len)
@@ -211,11 +242,84 @@ class ContinuousServeEngine:
         self.boundary_log: List[BoundaryEvent] = []
         self.join_count = 0
 
-        self._decode = jax.jit(
-            lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
-        self._prefill = jax.jit(
-            lambda p, toks: tfm.forward(p, cfg, tokens=toks,
-                                        mode="prefill"))
+        # AOT width-variant executables (serving/compile_cache.py): the
+        # cache's prefill/decode entry points are lookup-or-traced
+        # -fallback, so a cold cache behaves exactly like the historical
+        # jit lambdas; warm_compile() makes boundary crossings traceless.
+        self.compile_cache = compile_cache
+        if compile_cache is not None:
+            if compile_cache.cfg is not cfg and compile_cache.cfg != cfg:
+                raise ValueError("compile_cache was built for a different "
+                                 "ModelConfig than this engine")
+            self._decode = compile_cache.decode
+            self._prefill = compile_cache.prefill
+        else:
+            self._decode = jax.jit(
+                lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
+            self._prefill = jax.jit(
+                lambda p, toks: tfm.forward(p, cfg, tokens=toks,
+                                            mode="prefill"))
+
+    def _prefill_len(self, plen: int) -> int:
+        """Padded prefill length for a ``plen``-token join."""
+        from repro.serving.compile_cache import pow2_bucket
+        if not self.prefill_bucketing:
+            return plen
+        return min(pow2_bucket(plen, self.prefill_bucket_min),
+                   max(self.max_len, plen))
+
+    def warm_compile(self, plans: Sequence[WidthPlan],
+                     prefill_lengths: Sequence[int] = ()) -> int:
+        """Plan-time AOT compilation: compile the ragged decode
+        executable (and bucketed single-request prefill executables for
+        ``prefill_lengths``) for every plan — plus the full-width
+        baseline — so boundary crossings and joins are table lookups.
+        Masked-crossover plans warm the full-width key.  Returns the
+        number of executables warmed; compile faults are absorbed (the
+        serve path falls back to the traced jit)."""
+        if self.compile_cache is None:
+            return 0
+        from repro.serving.compile_cache import (
+            decode_state_struct, realized_exec_key)
+        cache = self.compile_cache
+        prev_key = cache.active_key
+        buckets = sorted({self._prefill_len(int(l))
+                          for l in prefill_lengths})
+        n = 0
+        todo = ([None] if self.swapper is None else list(plans) + [None])
+        for plan in todo:
+            if plan is None:
+                key = cache.full_key
+                params = self._canonical
+                heads = None
+            else:
+                masked = bool(plan.widths) \
+                    and cache.decide(plan) == "masked"
+                params, event = self.swapper.apply_guarded(
+                    plan, masked=masked)
+                if event.outcome != "ok":
+                    continue
+                mlp_w, heads_to = self.swapper.realize_plan(plan)
+                if masked:
+                    key, heads = cache.full_key, None
+                else:
+                    key = realized_exec_key(mlp_w, heads_to)
+                    heads = heads_to
+            cache.set_active(key)
+            st = decode_state_struct(self.cfg, self.slots, self.max_len,
+                                     swapper=self.swapper, heads=heads)
+            cur = jnp.zeros((self.slots,), jnp.int32)
+            posv = jnp.zeros((self.slots,), jnp.int32)
+            n += cache.precompile("decode", key, (self.slots,),
+                                  (params, cur, posv, st))
+            for plen in buckets:
+                toks = jnp.zeros((1, plen), jnp.int32)
+                n += cache.precompile("prefill", key, (1, plen),
+                                      (params, toks))
+            if plan is not None:
+                cache.mark_plan_warm(plan)
+        cache.set_active(prev_key)
+        return n
 
     # ------------------------------------------------------------------
     # submission
@@ -339,9 +443,21 @@ class ContinuousServeEngine:
             self._terminal(tr, failed=True)
             return 0
         tr.join_t = self.clock()
-        logits, states, _ = self._prefill(self.params_active, prompt[None])
-        self._write_slot(i, states, len(prompt))
-        last = logits[0, -1, :self.cfg.vocab_size]
+        plen = len(prompt)
+        padded = self._prefill_len(plen)
+        if padded > plen:
+            # pow2 bucket: right-pad so the prefill shape is one of
+            # log2(max_len) buckets.  Exact for global causal attention
+            # (rows < plen never attend the pad rows; _write_slot only
+            # commits the first plen KV rows; logits read at plen-1).
+            prompt_in = np.zeros(padded, np.int32)
+            prompt_in[:plen] = prompt
+        else:
+            prompt_in = prompt
+        logits, states, _ = self._prefill(self.params_active,
+                                          prompt_in[None])
+        self._write_slot(i, states, plen)
+        last = logits[0, plen - 1, :self.cfg.vocab_size]
         first = int(jnp.argmax(last))
         tr.generated.append(first)
         self._slots[i] = tr
@@ -380,15 +496,20 @@ class ContinuousServeEngine:
             for key, lv in lst.items():
                 gv = gst[key]
                 if key in ("k", "v"):
-                    # (B, S, KV, dh) / stacked (U, B, S, KV, dh)
-                    s = lv.shape[2 if stacked else 1]
+                    # (B, S, KV, dh) / stacked (U, B, S, KV, dh).  Only
+                    # the first `plen` source rows are committed: a
+                    # bucketed prefill carries junk KV in its pad rows
+                    # (local-window ring caches may also carry fewer
+                    # rows than plen — take what the source has).
+                    s = min(plen, lv.shape[2 if stacked else 1])
                     if stacked:
                         upd = gv.at[:, i, :s] if s < gv.shape[2] \
                             else gv.at[:, i]
-                        out[key] = upd.set(lv[:, 0].astype(gv.dtype))
+                        out[key] = upd.set(
+                            lv[:, 0, :s].astype(gv.dtype))
                     else:
                         upd = gv.at[i, :s] if s < gv.shape[1] else gv.at[i]
-                        out[key] = upd.set(lv[0].astype(gv.dtype))
+                        out[key] = upd.set(lv[0, :s].astype(gv.dtype))
                 else:
                     # per-slot state without a sequence axis (recurrent)
                     out[key] = (gv.at[:, i].set(lv[:, 0].astype(gv.dtype))
@@ -456,8 +577,12 @@ class ContinuousServeEngine:
         requeued = self._requeue_in_flight()
         self.params_active = self._canonical
         self._heads_active = self._full_heads.copy()
+        self._shape_heads = self._full_heads.copy()
+        self._masked_active = False
         self._plan_active = None
         self._key_active = None
+        if self.compile_cache is not None:
+            self.compile_cache.set_active(None)
         self.states = tfm.init_decode_state(self.cfg, self.slots,
                                             self.max_len)
         self._last_boundary_fail = self.steps
@@ -477,13 +602,17 @@ class ContinuousServeEngine:
         if self.steps - self._last_boundary_fail < self.boundary_cooldown:
             return                      # cooling down after a failure
         mlp_t, heads_to = self.swapper.realize_plan(plan)
+        masked = (self.compile_cache is not None
+                  and bool(getattr(plan, "widths", None))
+                  and self.compile_cache.decide(plan) == "masked")
         key = (tuple(mlp_t.tolist()), tuple(heads_to.tolist()))
-        if key == self._key_active or (
+        if (key == self._key_active
+                and masked == self._masked_active) or (
                 self._key_active is None
                 and (mlp_t == self.cfg.d_ff).all()
                 and (heads_to == self.cfg.n_heads).all()):
             return                      # same realized widths: no boundary
-        params_new, event = self.swapper.apply_guarded(plan)
+        params_new, event = self.swapper.apply_guarded(plan, masked=masked)
         self.swap_log.append(event)
         if event.outcome != "ok":
             self._abort_boundary("swap_rolled_back", plan, event.error)
@@ -492,17 +621,29 @@ class ContinuousServeEngine:
         kv_from = np.maximum(self._heads_active // g, 1)
         kv_to = np.maximum(heads_to // g, 1)
         live = any(tr is not None for tr in self._slots)
+        shape_to = self._full_heads.copy() if masked else heads_to
         if live and (kv_to > kv_from).any():
             # Growing KV heads cannot restore sliced-away history:
             # requeue the live requests so their tokens re-prefill at the
-            # new width, then adopt the plan on a fresh cache.
+            # new width, then adopt the plan on a fresh cache.  (A masked
+            # grow requeues too — the re-grown heads' history rows hold
+            # zeros written while they were masked.)
             requeued = self._requeue_in_flight()
-            self.states = self._fresh_states(heads_to)
+            self.states = self._fresh_states(shape_to)
             outcome = "requeued_grow"
+        elif masked and (shape_to == self._shape_heads).all():
+            # Masked realization on already-canonical shapes: the
+            # dropped heads are zero-weighted on both the q and output
+            # projections, so stale KV rows in them are unreadable — no
+            # state op needed.  (Every other boundary goes through
+            # reshape_states, preserving its transactional fault
+            # surface even for value-only changes.)
+            requeued = 0
+            outcome = "ok"
         else:
             try:
                 self.states = self.swapper.reshape_states(
-                    self.states, self._heads_active, heads_to)
+                    self.states, self._shape_heads, shape_to)
                 requeued = 0
                 outcome = "ok"
             except Exception as e:  # noqa: BLE001 — the guard IS the point
@@ -511,8 +652,14 @@ class ContinuousServeEngine:
                 return
         self.params_active = params_new
         self._heads_active = heads_to
+        self._shape_heads = shape_to
+        self._masked_active = masked
         self._plan_active = plan
         self._key_active = key
+        if self.compile_cache is not None:
+            from repro.serving.compile_cache import realized_exec_key
+            self.compile_cache.set_active(
+                None if masked else realized_exec_key(mlp_t, heads_to))
         self.plan_log.append(plan)
         self.boundary_log.append(BoundaryEvent(
             step=self.steps, plan_name=plan.traffic.name,

@@ -88,8 +88,8 @@ class DegradationLadder:
     @classmethod
     def build(cls, planner: ServingWidthPlanner,
               traffic: Sequence[TrafficClass],
-              deltas: Sequence[float] = (0.85, 0.7, 0.55)
-              ) -> "DegradationLadder":
+              deltas: Sequence[float] = (0.85, 0.7, 0.55),
+              tile_hw=None) -> "DegradationLadder":
         """One Algorithm 2 pass per (traffic class, delta target).
 
         Level 0 is always the canonical full width (``widths={}`` — the
@@ -101,6 +101,12 @@ class DegradationLadder:
         swap, which is correct: the ladder never *adds* latency).  All
         table builds go through the planner's optimizer, so a warm
         profile-table cache makes ladder construction sweep-free.
+
+        With ``tile_hw``, equal-reduction rungs are ordered tail-free
+        grids first (``planner.plan_tail_free`` on a planner carrying
+        the same spec): the ladder reaches for a wave-aligned width
+        before an equally-fast tail-heavy one.  ``tile_hw=None``
+        preserves the historical ordering bit-for-bit.
         """
         traffic = list(traffic)
         if not traffic:
@@ -119,9 +125,22 @@ class DegradationLadder:
                 dataclasses.replace(tc, delta=float(delta))
                 for tc in traffic]))
             red = max(p.latency_reduction for p in plans.values())
-            planned.append((red, plans))
-        planned.sort(key=lambda rp: rp[0])
-        for i, (red, plans) in enumerate(planned):
+            if tile_hw is None:
+                tail_penalty = 0
+            else:
+                # Score through the planner's helper under the ladder's
+                # tile spec (restored afterwards — build() must not
+                # change the planner's own select() behavior).
+                prev_hw, planner.tile_hw = planner.tile_hw, tile_hw
+                try:
+                    tail_penalty = int(not all(
+                        planner.plan_tail_free(p) for p in plans.values()
+                        if p.widths))
+                finally:
+                    planner.tile_hw = prev_hw
+            planned.append((red, tail_penalty, plans))
+        planned.sort(key=lambda rp: (rp[0], rp[1]))
+        for i, (red, _, plans) in enumerate(planned):
             rungs.append(LadderRung(level=i + 1, plans=plans,
                                     reduction=red))
         return cls(rungs)

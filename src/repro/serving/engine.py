@@ -233,7 +233,8 @@ class ServingWidthPlanner:
 
     def __init__(self, hw, layers: Sequence, *, cache=None,
                  tau_frac: float = 0.02,
-                 modules: "dict[str, ModuleRef] | None" = None):
+                 modules: "dict[str, ModuleRef] | None" = None,
+                 tile_hw=None, compile_cache=None):
         from repro.core.tail_model import WaveQuantizationModel
         from repro.core.tail_optimizer import TailEffectOptimizer
 
@@ -242,6 +243,16 @@ class ServingWidthPlanner:
         self.model = WaveQuantizationModel(hw)
         self.opt = TailEffectOptimizer(self.model, cache=cache)
         self.tau_frac = tau_frac
+        # Kernel-grid tail awareness (optional): with a tile_hw spec,
+        # `select` breaks log-distance ties toward plans whose autotuned
+        # matmul grids are tail-free (core.candidates.kernel_tail_free)
+        # and — with a serving.compile_cache attached — whose
+        # executables are already AOT-warm.  With tile_hw=None the
+        # historical first-planned tie-break is bit-for-bit unchanged.
+        self.tile_hw = tile_hw
+        self.compile_cache = compile_cache
+        self._layer_by_name = {tl.layer.name: tl.layer
+                               for tl in self.layers}
         # name -> pytree address; stamped on every WidthPlan so a
         # WidthSwapper can materialize it (width_swap.serving_templates
         # builds layers and modules as a matched pair).
@@ -309,21 +320,55 @@ class ServingWidthPlanner:
                 modules=self.modules)
         return self.plans
 
+    def plan_tail_free(self, plan: WidthPlan) -> bool:
+        """True when every planned width's autotuned matmul grid is
+        tail-free on ``tile_hw`` (trivially True without one).  Widths
+        naming layers outside the template set are skipped — a hand
+        -injected plan can't be scored, only compared by distance."""
+        if self.tile_hw is None:
+            return True
+        from repro.core.candidates import kernel_tail_free
+        for name, w in plan.widths.items():
+            layer = self._layer_by_name.get(name)
+            if layer is None:
+                continue
+            if not kernel_tail_free(self.tile_hw, plan.traffic.tokens,
+                                    layer.d_in, w):
+                return False
+        return True
+
+    def plan_is_warm(self, plan: WidthPlan) -> bool:
+        """True when a compile cache is attached and holds AOT
+        executables for the plan's widths."""
+        return self.compile_cache is not None \
+            and self.compile_cache.plan_is_warm(plan)
+
     def select(self, tokens: int) -> WidthPlan:
         """The planned class nearest (log-scale) to a batch's token
         volume — the boundary-time lookup ``ServeEngine`` performs.
 
         ``tokens`` is clamped to >= 1 (an empty batch selects the
-        smallest class); an exact log-distance tie resolves to the class
-        planned first (``min`` is stable over insertion order), so the
-        boundary lookup is deterministic."""
+        smallest class).  Without ``tile_hw``, an exact log-distance tie
+        resolves to the class planned first (``min`` is stable over
+        insertion order) — the historical deterministic behavior.  With
+        ``tile_hw``, ties instead prefer plans whose autotuned kernel
+        grids are tail-free, then plans whose executables are already
+        AOT-warm: equal-latency widths are not equal when one wastes a
+        partial wave or pays a trace at its first boundary."""
         if not self.plans:
             raise ValueError("no plans yet: call plan() first")
-        best = min(
+        log_t = np.log(max(tokens, 1))
+        if self.tile_hw is None:
+            return min(
+                self.plans.values(),
+                key=lambda p: abs(log_t
+                                  - np.log(max(p.traffic.tokens, 1))))
+        return min(
             self.plans.values(),
-            key=lambda p: abs(np.log(max(tokens, 1))
-                              - np.log(max(p.traffic.tokens, 1))))
-        return best
+            key=lambda p: (abs(log_t
+                               - np.log(max(p.traffic.tokens, 1))),
+                           not self.plan_tail_free(p),
+                           not self.plan_is_warm(p)))
 
 
 class ServeEngine:
@@ -336,7 +381,7 @@ class ServeEngine:
                  swapper=None, admission: "AdmissionControl | None" = None,
                  degrader=None,
                  clock: Callable[[], float] = time.monotonic,
-                 batch_cost_fn=None):
+                 batch_cost_fn=None, compile_cache=None):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -370,11 +415,77 @@ class ServeEngine:
         self.swap_log: List = []
         self.batch_log: List[BatchStats] = []
 
-        self._decode = jax.jit(
-            lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
-        self._prefill = jax.jit(
-            lambda p, toks: tfm.forward(p, cfg, tokens=toks,
-                                        mode="prefill"))
+        # AOT width-variant executables (serving/compile_cache.py): with
+        # a cache attached every prefill/decode goes through its
+        # lookup-or-traced-fallback entry points, the boundary swap sets
+        # the active realized key, and plans whose modeled saving cannot
+        # pay for a compile realize as zero-masked full-shape params on
+        # the warm full-width executable (`decide`).
+        self.compile_cache = compile_cache
+        if compile_cache is not None:
+            if compile_cache.cfg is not cfg and compile_cache.cfg != cfg:
+                raise ValueError("compile_cache was built for a different "
+                                 "ModelConfig than this engine")
+            self._decode = compile_cache.decode
+            self._prefill = compile_cache.prefill
+        else:
+            self._decode = jax.jit(
+                lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
+            self._prefill = jax.jit(
+                lambda p, toks: tfm.forward(p, cfg, tokens=toks,
+                                            mode="prefill"))
+
+    def warm_compile(self, plans: Sequence[WidthPlan],
+                     batch_shapes: Sequence[tuple]) -> int:
+        """Plan-time AOT compilation: for every plan x (batch, prompt
+        length) shape, compile the prefill and decode executables so the
+        batch-boundary swap to that plan is a table lookup, never a
+        trace.  Masked-crossover plans (``decide() == "masked"``) warm
+        the full-width key instead.  Returns the number of executables
+        compiled; a compile fault is absorbed (traced fallback)."""
+        if self.compile_cache is None or self.swapper is None:
+            return 0
+        from repro.serving.compile_cache import (
+            decode_state_struct, realized_exec_key)
+        cache = self.compile_cache
+        prev_key = cache.active_key
+        n = 0
+        todo = list(plans) + [None]     # None: the full-width baseline
+        for plan in todo:
+            if plan is None:
+                key = cache.full_key
+                params = self.swapper.full_params
+                heads = None
+            else:
+                masked = bool(plan.widths) \
+                    and cache.decide(plan) == "masked"
+                params, event = self.swapper.apply_guarded(
+                    plan, masked=masked)
+                if event.outcome != "ok":
+                    continue
+                mlp_w, heads_to = self.swapper.realize_plan(plan)
+                if masked:
+                    key, heads = cache.full_key, None
+                else:
+                    key = realized_exec_key(mlp_w, heads_to)
+                    heads = heads_to
+            for (b, plen) in batch_shapes:
+                b, plen = int(b), int(plen)
+                cache.set_active(key)
+                toks = jnp.zeros((b, plen), jnp.int32)
+                n += cache.precompile("prefill", key, (b, plen),
+                                      (params, toks))
+                st = decode_state_struct(self.cfg, b, self.max_len,
+                                         swapper=self.swapper,
+                                         heads=heads)
+                cur = jnp.zeros((b,), jnp.int32)
+                pos = jnp.zeros((), jnp.int32)
+                n += cache.precompile("decode", key, (b,),
+                                      (params, cur, pos, st))
+            if plan is not None:
+                cache.mark_plan_warm(plan)
+        cache.set_active(prev_key)
+        return n
 
     def generate(self, requests: List[Request]) -> List[Result]:
         """Serve an open-loop burst: all requests arrive now; batches of
@@ -465,8 +576,25 @@ class ServeEngine:
                 # module mapping still raises (build templates via
                 # width_swap.serving_templates) rather than silently
                 # serving full-width weights.
-                params, event = self.swapper.apply_guarded(plan)
+                masked = (self.compile_cache is not None
+                          and bool(plan.widths)
+                          and self.compile_cache.decide(plan) == "masked")
+                params, event = self.swapper.apply_guarded(
+                    plan, masked=masked)
                 self.swap_log.append(event)
+                if self.compile_cache is not None:
+                    if event.outcome == "ok" and not masked:
+                        from repro.serving.compile_cache import \
+                            realized_exec_key
+                        mlp_w, heads = self.swapper.realize_plan(plan)
+                        self.compile_cache.set_active(
+                            realized_exec_key(mlp_w, heads))
+                    else:
+                        # masked or rolled back: canonical shapes run on
+                        # the full-width executable
+                        self.compile_cache.set_active(None)
+        elif self.compile_cache is not None:
+            self.compile_cache.set_active(None)
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad

@@ -228,6 +228,8 @@ class SwapEvent:
     cache_hit: bool           # True: served from the plan cache, 0 allocs
     outcome: str = "ok"       # "ok" | "rolled_back" (guarded swap failed)
     error: str = ""           # repr of the mid-swap exception, if any
+    masked: bool = False      # zero-masked full-shape realization (the
+    #                           compile-cache cost-crossover rule)
 
 
 class WidthSwapper:
@@ -366,10 +368,18 @@ class WidthSwapper:
         return params
 
     # ---- the boundary swap ---------------------------------------------
-    def apply(self, plan) -> tuple:
+    def apply(self, plan, *, masked: bool = False) -> tuple:
         """Materialize ``plan`` (a WidthPlan with a module mapping) and
         return ``(params, SwapEvent)``.  The full-width plan returns the
         canonical tree itself — swap-back is bit-for-bit the original.
+
+        ``masked=True`` realizes the plan as zero-masked *full-shape*
+        params (``materialize(..., pad_to_full=True)``): the dropped
+        channels are zeroed but every array keeps its canonical shape,
+        so the result runs on the already-compiled full-width executable
+        — the compile cache's cost-crossover realization.  Masked and
+        sliced materializations of the same widths are cached under
+        distinct keys.
 
         The plan cache is only written *after* materialization completes
         (the "commit" checkpoint), so a failure at any step leaves no
@@ -385,19 +395,24 @@ class WidthSwapper:
         self._step("realize")
         mlp_w, heads = self.realize(plan.widths, plan.modules)
         key = (tuple(mlp_w.tolist()), tuple(heads.tolist()))
-        hit = key in self._cache
+        full = (mlp_w == self.cfg.d_ff).all() \
+            and (heads == self.cfg.n_heads).all()
+        if full:
+            masked = False          # nothing to mask at full width
+        cache_key = key + (("masked",) if masked else ())
+        hit = cache_key in self._cache
         if hit:
-            params = self._cache[key]
-            self._cache.move_to_end(key)
+            params = self._cache[cache_key]
+            self._cache.move_to_end(cache_key)
         else:
             self._step("materialize")
-            if (mlp_w == self.cfg.d_ff).all() \
-                    and (heads == self.cfg.n_heads).all():
+            if full:
                 params = self.full_params
             else:
-                params = self.materialize(mlp_w, heads)
+                params = self.materialize(mlp_w, heads,
+                                          pad_to_full=masked)
             self._step("commit")
-            self._cache[key] = params
+            self._cache[cache_key] = params
             while len(self._cache) > self.max_plans:
                 self._cache.popitem(last=False)
         self._step("finish")
@@ -405,10 +420,11 @@ class WidthSwapper:
         event = SwapEvent(plan_name=name, key=key,
                           realized=self.realized_widths(mlp_w, heads,
                                                         plan.modules),
-                          swap_s=time.perf_counter() - t0, cache_hit=hit)
+                          swap_s=time.perf_counter() - t0, cache_hit=hit,
+                          masked=masked)
         return params, event
 
-    def apply_guarded(self, plan) -> tuple:
+    def apply_guarded(self, plan, *, masked: bool = False) -> tuple:
         """Transactional :meth:`apply`: any mid-swap exception rolls back
         to the retained canonical tree instead of propagating.
 
@@ -426,7 +442,7 @@ class WidthSwapper:
                 "width_swap.serving_templates and pass modules= to "
                 "ServingWidthPlanner")
         try:
-            return self.apply(plan)
+            return self.apply(plan, masked=masked)
         except Exception as e:  # noqa: BLE001 — the guard IS the point
             name = plan.traffic.name \
                 if getattr(plan, "traffic", None) else ""

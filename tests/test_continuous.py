@@ -22,12 +22,12 @@ from repro.serving import (
     AdmissionControl, Arrival, ContinuousServeEngine,
     DegradationController, DegradationLadder, Request, ServeEngine,
     ServingWidthPlanner, TrafficClass, WidthPlan, WidthSwapper,
-    serving_templates,
+    WidthVariantCompileCache, serving_templates,
 )
 from repro.serving.chaos import (
-    InjectedFault, ReshapeFailureInjector, SwapFailureInjector,
-    TailReport, TrafficLoad, VirtualClock, class_tail_reports,
-    modeled_batch_cost, open_loop_arrivals,
+    CompileFailureInjector, InjectedFault, ReshapeFailureInjector,
+    SwapFailureInjector, TailReport, TrafficLoad, VirtualClock,
+    class_tail_reports, modeled_batch_cost, open_loop_arrivals,
 )
 
 
@@ -514,3 +514,165 @@ class TestContinuousChaosScenario:
             )
 
         assert signature() == signature()
+
+
+# ---------------------------------------------------------------------------
+# AOT compile cache in the serving hot path
+# ---------------------------------------------------------------------------
+def make_cached_engine(cfg, params, plan, *, cache=None, lens=(6, 6),
+                       max_new=8):
+    """Continuous engine + compile cache + scripted narrow plan — the
+    shared rig for the AOT-serving scenarios."""
+    cache = cache if cache is not None else WidthVariantCompileCache(cfg)
+    swapper = WidthSwapper(params, cfg)
+    eng = ContinuousServeEngine(
+        params, cfg, max_len=48, batch_slots=2, clock=VirtualClock(),
+        swapper=swapper, compile_cache=cache,
+        batch_cost_fn=modeled_batch_cost(1e-3),
+        max_retries=3, boundary_every=2, boundary_cooldown=1000)
+    eng.planner = None
+    eng.degrader = _ScriptedSelector([plan])
+    eng.admission = AdmissionControl(max_queue_batches=100)
+    return eng, cache, swapper
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+class TestCompileCacheServing:
+    def _narrow(self, cfg, params, *, sliced):
+        """A planner-produced mlp-narrowing plan with its economics
+        pinned: ``sliced=True`` makes the modeled saving dwarf one AOT
+        compile (own executable), ``False`` makes it negligible (the
+        zero-mask crossover)."""
+        planner, _ = make_serving_stack(cfg, params)
+        narrow = planner.select(96)
+        assert narrow.widths
+        if sliced:
+            return dataclasses.replace(narrow, latency_s=0.5,
+                                       baseline_latency_s=1.0)
+        return dataclasses.replace(narrow, latency_s=0.999,
+                                   baseline_latency_s=1.0)
+
+    def test_warm_boundary_crossing_traces_nothing(self, setup):
+        """The acceptance contract: after warm_compile, a serve run that
+        crosses a width boundary performs zero jit traces — every
+        prefill/decode is an AOT executable hit."""
+        cfg, params = setup
+        narrow = self._narrow(cfg, params, sliced=True)
+        eng, cache, _ = make_cached_engine(cfg, params, narrow)
+        warmed = eng.warm_compile([narrow], prefill_lengths=(6,))
+        assert warmed > 0
+        traced_at_warm = cache.tracer.count
+        results = eng.run(reqs_for(cfg, (6, 6), max_new=8))
+        assert cache.tracer.count == traced_at_warm   # ZERO new traces
+        assert cache.stats["hits"] > 0
+        assert any(b.outcome == "ok" for b in eng.boundary_log)
+        assert eng.ledger().complete
+        assert all(len(r.tokens) == 8 for r in results)
+
+    def test_masked_crossover_runs_on_full_width_executable(self, setup):
+        """An uneconomic plan realizes as zero-masked full-shape params:
+        the boundary commits, but the cache stays addressed at the
+        full-width key — no narrow executable is ever built."""
+        cfg, params = setup
+        narrow = self._narrow(cfg, params, sliced=False)
+        eng, cache, _ = make_cached_engine(cfg, params, narrow)
+        assert cache.decide(narrow) == "masked"
+        eng.warm_compile([narrow], prefill_lengths=(6,))
+        traced_at_warm = cache.tracer.count
+        results = eng.run(reqs_for(cfg, (6, 6), max_new=8))
+        assert cache.tracer.count == traced_at_warm
+        assert any(b.outcome == "ok" for b in eng.boundary_log)
+        assert eng._masked_active
+        assert cache.active_key == cache.full_key
+        # full-shape params throughout: the masked tree mirrors canonical
+        canon = {tuple(x.shape)
+                 for x in jax.tree_util.tree_leaves(params)}
+        active = {tuple(x.shape)
+                  for x in jax.tree_util.tree_leaves(eng.params_active)}
+        assert active == canon
+        assert eng.ledger().complete
+        assert all(len(r.tokens) == 8 for r in results)
+
+    def test_lookup_fault_serves_traced_with_zero_lost(self, setup):
+        """Chaos: every serve-time executable fetch faults.  The engine
+        must fall back to the traced path and finish every request with
+        its full token budget — an AOT fault is never a lost request."""
+        cfg, params = setup
+        narrow = self._narrow(cfg, params, sliced=True)
+        inj = CompileFailureInjector(1.0, steps=("lookup",))
+        cache = WidthVariantCompileCache(cfg, fault_hook=inj)
+        eng, cache, _ = make_cached_engine(cfg, params, narrow,
+                                           cache=cache)
+        eng.warm_compile([narrow], prefill_lengths=(6,))
+        results = eng.run(reqs_for(cfg, (6, 6), max_new=8))
+        assert inj.injected >= 1
+        assert cache.stats["fallbacks"] >= 1
+        assert cache.stats["hits"] == 0       # warm entries unreachable
+        led = eng.ledger()
+        assert led.complete and led.failed == 0
+        assert all(len(r.tokens) == 8 for r in results)
+
+    def test_compile_fault_serves_traced_with_zero_lost(self, setup):
+        """Chaos: plan-time AOT compilation faults, so nothing is ever
+        warm — the run degrades to the historical traced behavior."""
+        cfg, params = setup
+        narrow = self._narrow(cfg, params, sliced=True)
+        inj = CompileFailureInjector(1.0, steps=("compile",))
+        cache = WidthVariantCompileCache(cfg, fault_hook=inj)
+        eng, cache, _ = make_cached_engine(cfg, params, narrow,
+                                           cache=cache)
+        assert eng.warm_compile([narrow], prefill_lengths=(6,)) == 0
+        assert inj.injected >= 1 and len(cache) == 0
+        results = eng.run(reqs_for(cfg, (6, 6), max_new=8))
+        assert cache.stats["fallbacks"] >= 1
+        led = eng.ledger()
+        assert led.complete and led.failed == 0
+        assert all(len(r.tokens) == 8 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# pow2 prefill buckets: bounded trace count, unchanged tokens
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPrefillBucketing:
+    LENS = (3, 5, 6, 7, 9, 12)
+
+    def _run(self, cfg, params, *, cache):
+        eng = ContinuousServeEngine(
+            params, cfg, max_len=48, batch_slots=2, clock=VirtualClock(),
+            compile_cache=cache,
+            batch_cost_fn=modeled_batch_cost(1e-3))
+        results = eng.run(reqs_for(cfg, self.LENS, max_new=6))
+        assert eng.ledger().complete
+        return eng, [r.tokens.tolist() for r in results]
+
+    def test_buckets_bound_traces(self, setup):
+        """Six distinct prompt lengths land in two pow2 buckets {8, 16}:
+        exactly 2 prefill traces + 1 decode trace, instead of one trace
+        per distinct length — the grow-boundary retrace fix, pinned."""
+        cfg, params = setup
+        cache = WidthVariantCompileCache(cfg)
+        eng, _ = self._run(cfg, params, cache=cache)
+        assert eng.prefill_bucketing          # default ON with a cache
+        assert {eng._prefill_len(l) for l in self.LENS} == {8, 16}
+        assert cache.tracer.count == 3        # 2 buckets + 1 decode shape
+
+    def test_bucketed_tokens_match_unbucketed(self, setup):
+        """Right-padded pow2 prefill is exact for global causal
+        attention: the generated tokens are identical to the unbucketed
+        engine's."""
+        cfg, params = setup
+        cache = WidthVariantCompileCache(cfg)
+        _, bucketed = self._run(cfg, params, cache=cache)
+        _, plain = self._run(cfg, params, cache=None)
+        assert bucketed == plain
+
+    def test_explicit_bucketing_on_ineligible_config_raises(self, setup):
+        cfg, params = setup
+        local_cfg = dataclasses.replace(cfg, block_pattern=("local",),
+                                        window=8)
+        local_params = init_params(jax.random.PRNGKey(0), local_cfg)
+        with pytest.raises(ValueError, match="prefill_bucketing"):
+            ContinuousServeEngine(local_params, local_cfg, max_len=48,
+                                  prefill_bucketing=True)

@@ -204,3 +204,94 @@ class TestTelemetry:
         # other classes are independent windows
         planner.record("prefill", 1.0)
         assert len(planner.telemetry["prefill"]) == 1
+
+
+class _WarmStub:
+    """compile-cache stand-in: just the warm-plan registry surface."""
+
+    def __init__(self):
+        from repro.core.plan_address import plan_key
+        self._key = plan_key
+        self._warm = set()
+
+    def mark(self, plan):
+        self._warm.add(self._key(plan.widths))
+
+    def plan_is_warm(self, plan):
+        return self._key(plan.widths) in self._warm
+
+
+class TestTailAwareSelect:
+    """Kernel-grid tie-breaks (goldens): with tile_hw, equal-latency
+    widths are NOT equal — one wastes a partial wave (paper Eq. 3) or
+    pays a trace at its first boundary.  Width 4096 on TPU v5e tiles
+    tail-free at tokens=4096/d_in=4096; 4104 = 8*513 shares no lane-edge
+    divisor, so every tiling leaves a remainder wave."""
+
+    TAIL_FREE_W, TAIL_HEAVY_W = 4096, 4104
+
+    def _plan(self, name, width):
+        return WidthPlan(traffic=TrafficClass(name, 4096),
+                         widths={"ffn0": width}, latency_s=1.0,
+                         baseline_latency_s=2.0, satisfied=True,
+                         modules={})
+
+    def _planner(self, plans, **kw):
+        planner = ServingWidthPlanner(HW, make_templates(1), **kw)
+        for p in plans:
+            planner.plans[p.traffic.name] = p
+        return planner
+
+    def test_tail_free_width_wins_tie_either_order(self):
+        free = self._plan("free", self.TAIL_FREE_W)
+        heavy = self._plan("heavy", self.TAIL_HEAVY_W)
+        for order in ([heavy, free], [free, heavy]):
+            planner = self._planner(order, tile_hw=HW)
+            assert not planner.plan_tail_free(heavy)
+            assert planner.plan_tail_free(free)
+            assert planner.select(4096).traffic.name == "free"
+
+    def test_without_tile_hw_historical_order_preserved(self):
+        """tile_hw=None is the seed behavior, bit-for-bit: an exact tie
+        resolves to the first-planned class no matter its grid."""
+        free = self._plan("free", self.TAIL_FREE_W)
+        heavy = self._plan("heavy", self.TAIL_HEAVY_W)
+        planner = self._planner([heavy, free])
+        assert planner.select(4096).traffic.name == "heavy"
+        assert planner.plan_tail_free(heavy)      # trivially True: no hw
+
+    def test_warm_executable_breaks_remaining_tie(self):
+        """Both grids tail-free, one already AOT-warm: the warm plan
+        wins — equal-latency widths differ by a first-boundary trace."""
+        a = self._plan("cold", self.TAIL_FREE_W)
+        b = self._plan("warm", 5120)              # also tail-free on v5e
+        stub = _WarmStub()
+        stub.mark(b)
+        planner = self._planner([a, b], tile_hw=HW, compile_cache=stub)
+        assert planner.plan_tail_free(a) and planner.plan_tail_free(b)
+        assert planner.select(4096).traffic.name == "warm"
+
+    def test_unknown_layer_names_are_skipped(self):
+        """A hand-injected plan naming layers outside the template set
+        can't be scored — it is treated as tail-free, not a KeyError."""
+        planner = self._planner([], tile_hw=HW)
+        ghost = WidthPlan(traffic=TrafficClass("g", 4096),
+                          widths={"nope": 123}, latency_s=1.0,
+                          baseline_latency_s=2.0, satisfied=True,
+                          modules={})
+        assert planner.plan_tail_free(ghost)
+
+    def test_ladder_orders_equal_reduction_rungs_tail_first(self):
+        """DegradationLadder.build(tile_hw=...) ranks equal-reduction
+        rungs tail-free grids first and leaves the planner's own tile_hw
+        untouched afterwards."""
+        from repro.serving import DegradationLadder
+        planner = ServingWidthPlanner(HW, make_templates())
+        traffic = [TrafficClass("burst", 4096)]
+        planner.plan(traffic)
+        ladder = DegradationLadder.build(planner, traffic,
+                                         deltas=(0.85, 0.7), tile_hw=HW)
+        assert planner.tile_hw is None            # restored
+        assert len(ladder) == 3
+        reds = [r.reduction for r in ladder.rungs]
+        assert reds == sorted(reds)
