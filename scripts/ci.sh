@@ -47,6 +47,10 @@ fi
 
 if [[ "$tier" == "all" || "$tier" == "chaos" ]]; then
   echo "== chaos tier =="
+  # Boundary-recovery + compile-cache fault suites, and the hedged
+  # multi-replica serving suites (width-variant hedging, health-aware
+  # replica failover, chunked-prefill checkpoint recovery) in
+  # tests/test_hedged_serving.py — all seeded, all exact-ledger.
   python -m pytest -q -m chaos
 fi
 

@@ -275,6 +275,38 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     return o.reshape(b, h, dh).astype(COMPUTE_DTYPE)
 
 
+def chunk_prefill_attention(q, k_cache, v_cache, offset) -> jax.Array:
+    """Chunked-prefill attention: a (B, C, H, dh) query chunk whose rows
+    sit at absolute positions ``offset .. offset + C`` attends causally
+    over a full-capacity cache (B, S, KV, dh) that already holds every
+    previously committed chunk's K/V *and* this chunk's own rows
+    (written at ``[offset, offset + C)`` before the call).
+
+    Row ``i`` of the chunk sees exactly keys ``0 .. offset + i`` — the
+    same key set a whole-prompt causal prefill gives it — so chunked and
+    whole-prompt prefill agree.  Rows past the real chunk length (a
+    pow2-bucketed final chunk) compute garbage that the caller never
+    commits, exactly like bucketed prefill pad rows.  ``offset`` may be
+    a traced scalar: one executable serves every chunk position."""
+    b, c, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs",
+                    q.reshape(b, c, kv, g, dh).astype(COMPUTE_DTYPE),
+                    k_cache.astype(COMPUTE_DTYPE),
+                    preferred_element_type=jnp.float32) * scale
+    qpos = offset + jnp.arange(c)
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] <= qpos[:, None]              # (c, s)
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(COMPUTE_DTYPE),
+                   v_cache.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, c, h, dh).astype(COMPUTE_DTYPE)
+
+
 def _dp_axes(mesh: Mesh):
     return batch_axes(mesh)
 

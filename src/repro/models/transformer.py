@@ -222,6 +222,31 @@ def _self_attention(p, x, cfg: ModelConfig, kind: str, mode: str,
         y = attn_lib.out_proj(p, o[:, None])
         return y, {"k": kc, "v": vc}
 
+    if mode == "chunk":
+        # Chunked prefill: x is a (B, C, d) chunk whose rows sit at
+        # absolute positions pos..pos+C of a request already holding
+        # `pos` committed rows in `cache`.  The chunk's K/V land in
+        # cache rows [pos, pos+C) and every chunk row attends causally
+        # over the full cache — so chunk-by-chunk prefill reproduces the
+        # whole-prompt prefill exactly (global attention only: local
+        # ring caches rotate by total length and cannot be grown
+        # incrementally).
+        if kind != "attn":
+            raise ValueError(
+                "chunked prefill requires global attention layers")
+        s = x.shape[1]
+        q, k, v = attn_lib.qkv_proj(p, x)
+        rp = positions if positions is not None else _default_positions(
+            cfg, b, s, pos)
+        q, k = _rope(cfg, q, k, rp)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        o = attn_lib.chunk_prefill_attention(q, kc, vc, pos)
+        y = attn_lib.out_proj(p, o)
+        return y, {"k": kc, "v": vc}
+
     # train / prefill
     s = x.shape[1]
     q, k, v = attn_lib.qkv_proj(p, x)
@@ -301,6 +326,13 @@ def apply_layer(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     """Returns (x, new_state, aux)."""
     aux = dict(ZERO_AUX)
     new_state: dict = {}
+
+    if mode == "chunk" and kind != "attn":
+        # recurrent layers carry a running state, not a cache: a chunk
+        # cannot be replayed against them without decoding every token
+        raise ValueError(
+            f"chunked prefill supports global-attention layers only "
+            f"(got {kind!r})")
 
     if kind == "rwkv":
         h = apply_norm(p["norm1"], x, cfg.norm)
@@ -669,6 +701,36 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
                      cfg.logit_softcap)
     logits = _mask_vocab_pad(logits, cfg)
     return logits[:, 0], new_states
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array,
+                  pos: jax.Array, states: dict, positions=None,
+                  moe_strategy: str = "auto"):
+    """One prefill chunk: tokens (B, C) int32 at absolute positions
+    ``[pos, pos + C)``, written into (and attending over) the decode
+    -state caches in ``states``.  Returns (logits (B, C, V), new_states).
+
+    This is the incremental counterpart of ``mode="prefill"``: calling
+    it chunk-by-chunk over a prompt leaves the caches and logits a
+    whole-prompt prefill would produce, but no single call ever costs
+    more than one chunk — the serving engine interleaves these calls
+    with decode steps so a long prompt cannot stall the decode slots,
+    and each committed chunk is a recovery checkpoint.  Decoder-only,
+    pure global-attention dense stacks (same eligibility as prefill
+    bucketing); ``pos`` may be traced, so one executable per chunk
+    *shape* serves every chunk position."""
+    if cfg.is_encdec:
+        raise ValueError("chunked prefill supports decoder-only models")
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x, new_states, _ = apply_stack(
+        params["decoder"], x, cfg, encoder=False, mode="chunk",
+        states=states, enc_out=None, positions=positions, pos=pos,
+        moe_strategy=moe_strategy)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     cfg.logit_softcap)
+    logits = _mask_vocab_pad(logits, cfg)
+    return logits, new_states
 
 
 # ---------------------------------------------------------------------------

@@ -9,11 +9,15 @@ from repro.serving.degradation import (
     DegradationController, DegradationLadder, LadderRung, Shift,
 )
 from repro.serving.continuous import (
-    Arrival, BoundaryEvent, ContinuousServeEngine, Ledger,
+    Arrival, BoundaryEvent, ChunkEvent, ContinuousServeEngine, Ledger,
 )
 from repro.serving.compile_cache import (
     COMPILE_STEPS, CompileEvent, TraceCounter, WidthVariantCompileCache,
     pow2_bucket, realized_exec_key,
+)
+from repro.serving.hedging import HedgeEvent, HedgePolicy
+from repro.serving.router import (
+    HealthEvent, Replica, ReplicaRouter, RouterLedger,
 )
 from repro.serving import chaos
 
@@ -22,7 +26,9 @@ __all__ = ["AdmissionControl", "BatchStats", "Request", "Result",
            "WidthPlan", "SWAP_STEPS", "SwapEvent", "WidthSwapper",
            "serving_templates", "DegradationController",
            "DegradationLadder", "LadderRung", "Shift", "Arrival",
-           "BoundaryEvent", "ContinuousServeEngine", "Ledger",
-           "COMPILE_STEPS", "CompileEvent", "TraceCounter",
+           "BoundaryEvent", "ChunkEvent", "ContinuousServeEngine",
+           "Ledger", "COMPILE_STEPS", "CompileEvent", "TraceCounter",
            "WidthVariantCompileCache", "pow2_bucket",
-           "realized_exec_key", "chaos"]
+           "realized_exec_key", "HedgeEvent", "HedgePolicy",
+           "HealthEvent", "Replica", "ReplicaRouter", "RouterLedger",
+           "chaos"]

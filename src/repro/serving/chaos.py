@@ -66,7 +66,16 @@ class VirtualClock:
         return self.now
 
     def advance(self, dt: float) -> float:
-        self.now += float(dt)
+        dt = float(dt)
+        if dt < 0:
+            # A monotonic clock cannot run backwards.  A negative dt is
+            # always a harness bug (a mis-ordered event or a bad cost
+            # model) and used to corrupt every downstream latency and
+            # deadline silently — fail loudly instead.
+            raise ValueError(
+                f"VirtualClock.advance(dt={dt}): negative dt would make "
+                f"the monotonic clock run backwards")
+        self.now += dt
         return self.now
 
 
@@ -208,6 +217,87 @@ def modeled_batch_cost(per_token_s: float, *, overhead_s: float = 0.0,
     return cost
 
 
+class ReplicaStallInjector:
+    """Gray-failure straggler replica: wraps one replica's base batch
+    cost (compose via ``modeled_batch_cost(..., slow=...)``), multiplying
+    every costed step inside a deterministic step window by ``factor``
+    (optionally thinned by a seeded ``rate``).  Unlike
+    :class:`SlowBatchInjector` — an occasional straggler *batch* — this
+    models a *machine* going slow (thermal throttling, a noisy
+    neighbor, a dying disk): every step of one replica pays, which is
+    the failure mode replica routing + hedging exist to bound."""
+
+    def __init__(self, factor: float, *, start_step: int = 0,
+                 n_steps: int = 10 ** 9, rate: float = 1.0, seed: int = 0):
+        if factor < 1.0:
+            raise ValueError(f"stall factor must be >= 1 (got {factor})")
+        self.factor = float(factor)
+        self.start_step = max(int(start_step), 0)
+        self.n_steps = max(int(n_steps), 0)
+        self.rate = float(rate)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # costed steps evaluated
+        self.injected = 0       # steps actually slowed
+
+    def __call__(self, base_s: float) -> float:
+        i = self.calls
+        self.calls += 1
+        if self.start_step <= i < self.start_step + self.n_steps \
+                and self.rng.random() < self.rate:
+            self.injected += 1
+            return base_s * self.factor
+        return base_s
+
+
+class ReplicaCrashInjector:
+    """Replica death: raises :class:`InjectedFault` out of the replica's
+    batch-cost call — mid-step, after tokens were appended but before
+    the clock advanced, the worst spot — on the ``at_step``-th costed
+    step (and/or at a seeded ``rate``).  The router's contract is to
+    mark the replica dead, evict its in-flight work and requeue it onto
+    healthy replicas with generated tokens intact — zero lost requests.
+    Compose via ``modeled_batch_cost(..., slow=...)``."""
+
+    def __init__(self, *, at_step: Optional[int] = None, rate: float = 0.0,
+                 seed: int = 0):
+        self.at_step = None if at_step is None else int(at_step)
+        self.rate = float(rate)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # costed steps evaluated
+        self.injected = 0       # crashes raised
+
+    def __call__(self, base_s: float) -> float:
+        i = self.calls
+        self.calls += 1
+        if (self.at_step is not None and i == self.at_step) or (
+                self.rate > 0 and self.rng.random() < self.rate):
+            self.injected += 1
+            raise InjectedFault(
+                f"injected replica crash at costed step {i}")
+        return base_s
+
+
+class ChunkFaultInjector:
+    """Seeded ``ContinuousServeEngine.chunk_fault_hook`` — faults a
+    prefill *chunk* mid-prefill.  The engine's contract is that chunk
+    boundaries are recovery checkpoints: the request requeues holding
+    every committed chunk and resumes from the last one — never from
+    token zero — within its retry budget."""
+
+    def __init__(self, rate: float, *, seed: int = 0):
+        self.rate = float(rate)
+        self.rng = np.random.default_rng(seed)
+        self.calls = 0          # chunk executions evaluated
+        self.injected = 0       # faults actually raised
+
+    def __call__(self) -> None:
+        self.calls += 1
+        if self.rng.random() < self.rate:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected prefill-chunk failure #{self.injected}")
+
+
 class CacheCorruptor:
     """Seeded on-disk corruption of ``ProfileTableCache`` entries.
 
@@ -288,6 +378,28 @@ def open_loop_arrivals(loads: Sequence[TrafficLoad], vocab_size: int,
     """
     from repro.serving.continuous import Arrival
     from repro.serving.engine import Request
+
+    # Spike-schedule validation.  Both defects used to pass silently and
+    # only surface downstream as inexplicable tails: a burst outside its
+    # load's [0, duration_s] window extends the run past the schedule
+    # the caller asked for, and two classes spiking at the *same
+    # instant* interleave purely by list order — the per-class arrival
+    # ordering (and therefore the whole deterministic run) silently
+    # depends on how the loads were listed rather than on the seed.
+    spikes: dict = {}
+    for load in loads:
+        if load.burst_at is None or load.burst_n <= 0:
+            continue
+        t = float(load.burst_at)
+        if not 0.0 <= t <= load.duration_s:
+            raise ValueError(
+                f"load {load.name!r}: burst_at={t} outside its "
+                f"[0, duration_s={load.duration_s}] window")
+        if t in spikes:
+            raise ValueError(
+                f"overlapping spike schedules: loads {spikes[t]!r} and "
+                f"{load.name!r} both burst at t={t}")
+        spikes[t] = load.name
 
     out = []
     for k, load in enumerate(loads):

@@ -94,7 +94,7 @@ class TraceCounter:
 class CompileEvent:
     """One cache interaction, appended to ``events``."""
 
-    kind: str           # "prefill" | "decode"
+    kind: str           # "prefill" | "decode" | "chunk"
     key: tuple          # full executable key (fingerprint/kind/plan/shape)
     outcome: str        # "compiled" | "hit" | "miss" | "fault"
     wall_s: float = 0.0
@@ -160,9 +160,14 @@ class WidthVariantCompileCache:
             with ops.kernel_context(hw=self.hw, cache=self.tile_cache):
                 return tfm.decode_step(p, cfg, t, pos, st)
 
+        def chunk_fn(p, toks, pos, st):
+            with ops.kernel_context(hw=self.hw, cache=self.tile_cache):
+                return tfm.prefill_chunk(p, cfg, toks, pos, st)
+
         self._jit = {
             "prefill": jax.jit(self.tracer.wrap(prefill_fn)),
             "decode": jax.jit(self.tracer.wrap(decode_fn)),
+            "chunk": jax.jit(self.tracer.wrap(chunk_fn)),
         }
 
     # ------------------------------------------------------------------
@@ -298,6 +303,21 @@ class WidthVariantCompileCache:
             except Exception:  # noqa: BLE001 — shape/aval drift => fallback
                 self.stats["fallbacks"] += 1
         return self._jit["decode"](params, toks, pos, states)
+
+    def chunk(self, params, toks, pos, states):
+        """AOT-hit prefill chunk (``tfm.prefill_chunk``), else the traced
+        fallback.  The chunk offset ``pos`` is a traced argument, so one
+        executable per chunk *shape* serves every chunk position — the
+        chunked-prefill shape set is {(1, chunk)} plus the pow2 tail
+        buckets, bounded exactly like bucketed whole-prompt prefill."""
+        shape_key = tuple(int(d) for d in toks.shape)
+        exe = self._get("chunk", shape_key)
+        if exe is not None:
+            try:
+                return exe(params, toks, pos, states)
+            except Exception:  # noqa: BLE001 — shape/aval drift => fallback
+                self.stats["fallbacks"] += 1
+        return self._jit["chunk"](params, toks, pos, states)
 
 
 def decode_state_struct(cfg: ModelConfig, b: int, max_len: int, *,

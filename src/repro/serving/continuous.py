@@ -90,9 +90,24 @@ class BoundaryEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkEvent:
+    """One chunked-prefill fault, in ``chunk_log``: the request requeued
+    holding ``committed`` prefilled tokens — its recovery checkpoint."""
+
+    step: int                 # engine step index at the fault
+    rid: int                  # faulted request
+    committed: int            # prefill tokens surviving as checkpoint
+    error: str = ""           # repr of the chunk exception
+
+
+@dataclasses.dataclass(frozen=True)
 class Ledger:
     """Complete accounting of a serve run: every submitted request ends
-    in exactly one terminal state."""
+    in exactly one terminal state.  ``evicted`` counts requests handed
+    off to another replica by ``evict_in_flight`` — terminal *on this
+    engine* (the router re-submits them elsewhere), so they count toward
+    ``accounted`` here and exactly one engine ultimately finishes,
+    sheds, or fails each logical request."""
 
     submitted: int
     finished: int
@@ -100,10 +115,11 @@ class Ledger:
     failed: int
     in_flight: int            # non-terminal (0 after drain())
     queued: int               # non-terminal (0 after drain())
+    evicted: int = 0          # migrated off this engine (router failover)
 
     @property
     def accounted(self) -> int:
-        return self.finished + self.shed + self.failed
+        return self.finished + self.shed + self.failed + self.evicted
 
     @property
     def complete(self) -> bool:
@@ -114,7 +130,15 @@ class Ledger:
 
 @dataclasses.dataclass
 class _Tracked:
-    """Engine-internal per-request bookkeeping."""
+    """Engine-internal per-request bookkeeping.
+
+    The three ``chunk_*`` fields are the chunked-prefill checkpoint: a
+    slot-local decode pytree holding every committed chunk's KV rows,
+    plus the shape/effective head vectors it was built under.  The
+    checkpoint travels with the request through requeues and replica
+    migrations; it is resumable exactly when both head vectors still
+    match the engine's active ones (otherwise the prefill restarts —
+    never silently decodes against stale-width rows)."""
 
     rid: int
     request: Request
@@ -123,6 +147,10 @@ class _Tracked:
     generated: List[int] = dataclasses.field(default_factory=list)
     retries: int = 0
     join_t: float = 0.0
+    prefill_done: int = 0                       # committed prefill tokens
+    chunk_state: Optional[dict] = None          # batch-1 decode pytree
+    chunk_heads: Optional[np.ndarray] = None    # KV *shape* heads of it
+    chunk_eff: Optional[np.ndarray] = None      # effective heads of it
 
 
 class ContinuousServeEngine:
@@ -149,7 +177,10 @@ class ContinuousServeEngine:
                  boundary_every: int = 4, boundary_cooldown: int = 8,
                  compile_cache=None,
                  prefill_bucketing: Optional[bool] = None,
-                 prefill_bucket_min: int = 8):
+                 prefill_bucket_min: int = 8,
+                 prefill_chunk: Optional[int] = None,
+                 step_token_budget: Optional[int] = None,
+                 chunk_fault_hook: Optional[Callable[[], None]] = None):
         if cfg.is_encdec:
             raise ValueError("continuous batching supports decoder-only "
                              "models (no cross-attention cache rewrite)")
@@ -213,6 +244,28 @@ class ContinuousServeEngine:
             self.prefill_bucketing = bool(prefill_bucketing)
         self.prefill_bucket_min = max(int(prefill_bucket_min), 1)
 
+        # Chunked prefill: joins seat a request in a "prefilling" slot
+        # and its prompt runs `prefill_chunk` tokens at a time from each
+        # step's token budget, interleaved with the decode steps of the
+        # other slots — a long prompt can no longer stall every decode
+        # slot for its whole length, and each committed chunk is a
+        # recovery checkpoint.  Same eligibility as bucketing: chunks
+        # replay against a KV cache, which only global causal attention
+        # supports.
+        if prefill_chunk is not None:
+            if not bucket_ok:
+                raise ValueError(
+                    "chunked prefill requires a pure global-attention "
+                    "dense decoder (local/recurrent layers and MoE "
+                    "capacity cannot replay a chunk against a cache)")
+            if int(prefill_chunk) < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+        self.prefill_chunk = None if prefill_chunk is None \
+            else int(prefill_chunk)
+        self.step_token_budget = None if step_token_budget is None \
+            else max(int(step_token_budget), 1)
+        self.chunk_fault_hook = chunk_fault_hook
+
         # Slot state: one shared decode pytree + per-slot positions.
         self.states = tfm.init_decode_state(cfg, self.slots, self.max_len)
         self.pos = np.zeros(self.slots, dtype=np.int64)
@@ -234,13 +287,16 @@ class ContinuousServeEngine:
         self._finished = 0
         self._shed = 0
         self._failed = 0
+        self._evicted = 0
         self.steps = 0
         self._decode_steps = 0
         self._last_boundary_fail = -(10 ** 9)
         self.plan_log: List[WidthPlan] = []
         self.swap_log: List = []
         self.boundary_log: List[BoundaryEvent] = []
+        self.chunk_log: List[ChunkEvent] = []
         self.join_count = 0
+        self.chunk_steps = 0        # successful prefill chunks executed
 
         # AOT width-variant executables (serving/compile_cache.py): the
         # cache's prefill/decode entry points are lookup-or-traced
@@ -253,12 +309,16 @@ class ContinuousServeEngine:
                                  "ModelConfig than this engine")
             self._decode = compile_cache.decode
             self._prefill = compile_cache.prefill
+            self._chunk = compile_cache.chunk
         else:
             self._decode = jax.jit(
                 lambda p, t, pos, st: tfm.decode_step(p, cfg, t, pos, st))
             self._prefill = jax.jit(
                 lambda p, toks: tfm.forward(p, cfg, tokens=toks,
                                             mode="prefill"))
+            self._chunk = jax.jit(
+                lambda p, toks, pos, st: tfm.prefill_chunk(p, cfg, toks,
+                                                           pos, st))
 
     def _prefill_len(self, plen: int) -> int:
         """Padded prefill length for a ``plen``-token join."""
@@ -283,8 +343,21 @@ class ContinuousServeEngine:
             decode_state_struct, realized_exec_key)
         cache = self.compile_cache
         prev_key = cache.active_key
-        buckets = sorted({self._prefill_len(int(l))
-                          for l in prefill_lengths})
+        if self.prefill_chunk is None:
+            buckets = sorted({self._prefill_len(int(l))
+                              for l in prefill_lengths})
+            chunk_buckets: list = []
+        else:
+            # Chunked joins never call the whole-prompt prefill: the
+            # shape set is the chunk itself plus the pow2 buckets of
+            # each prompt's final partial chunk (capped at the chunk).
+            c = self.prefill_chunk
+            shapes = {c}
+            for plen in prefill_lengths:
+                tail = int(plen) % c or c
+                shapes.add(min(self._prefill_len(tail), c))
+            chunk_buckets = sorted(shapes)
+            buckets = []
         n = 0
         todo = ([None] if self.swapper is None else list(plans) + [None])
         for plan in todo:
@@ -343,19 +416,90 @@ class ContinuousServeEngine:
     def result(self, rid: int) -> Optional[Result]:
         return self._results.get(rid)
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel one in-flight or queued request *slot-exactly*: only
+        the named request's slot is freed (every other slot keeps
+        decoding undisturbed) and it resolves as shed with
+        ``cancelled=True``.  The hedging layer calls this on the losing
+        leg of a resolved hedge pair.  Returns False for unknown or
+        already-terminal ids."""
+        for i, tr in enumerate(self._slots):
+            if tr is not None and tr.rid == rid:
+                self._slots[i] = None
+                self.pos[i] = 0
+                self._last_tok[i] = 0
+                self._terminal(tr, shed=True, cancelled=True)
+                return True
+        for q in (self._retry, self._queue, self._pending):
+            for tr in q:
+                if tr.rid == rid:
+                    q.remove(tr)
+                    self._terminal(tr, shed=True, cancelled=True)
+                    return True
+        return False
+
+    # ------------------------------------------------------------------
+    # replica failover surface (used by serving.router)
+    # ------------------------------------------------------------------
+    def evict_in_flight(self) -> List[_Tracked]:
+        """Strip every non-terminal request off this engine — slots,
+        retry, waiting and pending queues — and return the trackers with
+        generated tokens and chunk checkpoints intact.  No Results are
+        written here: the requests are terminal *on this engine* only
+        (``Ledger.evicted``); the router re-submits them elsewhere via
+        :meth:`adopt`."""
+        out: List[_Tracked] = []
+        for i, tr in enumerate(self._slots):
+            if tr is not None:
+                self._slots[i] = None
+                self.pos[i] = 0
+                self._last_tok[i] = 0
+                out.append(tr)
+        out.extend(self._retry)
+        self._retry.clear()
+        out.extend(self._queue)
+        self._queue.clear()
+        out.extend(self._pending)
+        self._pending.clear()
+        self._evicted += len(out)
+        return out
+
+    def adopt(self, tr: _Tracked, *,
+              arrival_t: Optional[float] = None) -> int:
+        """Accept a request evicted from another replica: a fresh local
+        rid, original arrival time (so deadlines and latency keep
+        counting from the true arrival), generated tokens and chunk
+        checkpoint carried over.  Checkpoint head vectors revalidate at
+        join time against *this* engine's widths."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._submitted += 1
+        t = tr.arrival_t if arrival_t is None else float(arrival_t)
+        adopted = _Tracked(
+            rid=rid, request=tr.request, klass=tr.klass, arrival_t=t,
+            generated=list(tr.generated), retries=tr.retries,
+            prefill_done=tr.prefill_done, chunk_state=tr.chunk_state,
+            chunk_heads=tr.chunk_heads, chunk_eff=tr.chunk_eff)
+        if self.draining:
+            self._terminal(adopted, shed=True)
+            return rid
+        self._pending.append(adopted)
+        return rid
+
     def ledger(self) -> Ledger:
         return Ledger(
             submitted=self._submitted, finished=self._finished,
             shed=self._shed, failed=self._failed,
             in_flight=sum(tr is not None for tr in self._slots)
             + len(self._retry),
-            queued=len(self._queue) + len(self._pending))
+            queued=len(self._queue) + len(self._pending),
+            evicted=self._evicted)
 
     # ------------------------------------------------------------------
     # terminal states
     # ------------------------------------------------------------------
     def _terminal(self, tr: _Tracked, *, shed: bool = False,
-                  failed: bool = False) -> Result:
+                  failed: bool = False, cancelled: bool = False) -> Result:
         now = self.clock()
         lat = now - tr.arrival_t
         d = tr.request.deadline_s
@@ -363,10 +507,11 @@ class ContinuousServeEngine:
             tokens=np.asarray(tr.generated, dtype=np.int32),
             steps=len(tr.generated), shed=shed,
             deadline_missed=(d is not None and lat > d
-                             and (shed or not failed)
+                             and (shed or not failed) and not cancelled
                              and bool(tr.generated or not shed)),
             latency_s=lat, retries=tr.retries, failed=failed,
-            recovered=(tr.retries > 0 and not shed and not failed))
+            recovered=(tr.retries > 0 and not shed and not failed),
+            cancelled=cancelled)
         self._results[tr.rid] = res
         if failed:
             self._failed += 1
@@ -443,6 +588,8 @@ class ContinuousServeEngine:
             self._terminal(tr, failed=True)
             return 0
         tr.join_t = self.clock()
+        if self.prefill_chunk is not None:
+            return self._join_chunked(i, tr)
         plen = len(prompt)
         padded = self._prefill_len(plen)
         if padded > plen:
@@ -467,6 +614,114 @@ class ContinuousServeEngine:
         if self._done(tr):
             self._release(i)
         return len(prompt)
+
+    def _join_chunked(self, i: int, tr: _Tracked) -> int:
+        """Seat ``tr`` in slot ``i`` as a *prefilling* request: no model
+        call happens at join time — :meth:`_advance_prefills` runs its
+        prompt ``prefill_chunk`` tokens per step from the step token
+        budget.  A checkpoint built under the engine's current head
+        vectors resumes from its committed tokens; anything else (stale
+        widths, or a requeue that shrank the target, which cannot happen
+        but is guarded anyway) restarts from token zero."""
+        plen = len(tr.request.prompt) + len(tr.generated)
+        resumable = (
+            tr.chunk_state is not None
+            and tr.chunk_heads is not None and tr.chunk_eff is not None
+            and tr.chunk_heads.shape == self._shape_heads.shape
+            and (tr.chunk_heads == self._shape_heads).all()
+            and (tr.chunk_eff == self._heads_active).all()
+            and 0 < tr.prefill_done <= plen)
+        if not resumable:
+            tr.chunk_state = self._fresh_states(self._shape_heads, batch=1)
+            tr.chunk_heads = self._shape_heads.copy()
+            tr.chunk_eff = self._heads_active.copy()
+            tr.prefill_done = 0
+        self._slots[i] = tr
+        self.pos[i] = 0
+        self._last_tok[i] = 0
+        self.join_count += 1
+        return 0
+
+    def _advance_prefills(self, budget: Optional[int]) -> int:
+        """Run at most one prefill chunk per prefilling slot (round-robin,
+        repeated until the budget is spent or no slot can advance).
+        Returns padded chunk tokens executed, for step cost accounting.
+        The first chunk of a pass always runs even over budget — a chunk
+        larger than the budget must still make progress."""
+        spent = 0
+        progressed = True
+        while progressed:
+            progressed = False
+            for i, tr in enumerate(self._slots):
+                if tr is None or tr.chunk_state is None:
+                    continue
+                target = len(tr.request.prompt) + len(tr.generated)
+                clen = min(self.prefill_chunk, target - tr.prefill_done)
+                if clen <= 0:       # fully committed last pass
+                    continue
+                padded = min(self._prefill_len(clen), self.prefill_chunk)
+                if budget is not None and spent > 0 \
+                        and spent + padded > budget:
+                    return spent
+                prompt = np.concatenate(
+                    [np.asarray(tr.request.prompt, dtype=np.int32),
+                     np.asarray(tr.generated, dtype=np.int32)])
+                buf = np.zeros(padded, np.int32)
+                buf[:clen] = prompt[tr.prefill_done:tr.prefill_done + clen]
+                try:
+                    if self.chunk_fault_hook is not None:
+                        self.chunk_fault_hook()
+                    logits, tr.chunk_state = self._chunk(
+                        self.params_active, buf[None],
+                        jnp.asarray(tr.prefill_done, jnp.int32),
+                        tr.chunk_state)
+                except Exception as e:  # noqa: BLE001 — checkpoint restart
+                    self._chunk_fault(i, tr, e)
+                    continue
+                tr.prefill_done += clen
+                spent += padded
+                self.chunk_steps += 1
+                progressed = True
+                if tr.prefill_done >= target:
+                    self._commit_prefill(i, tr, logits, target, clen)
+        return spent
+
+    def _commit_prefill(self, i: int, tr: _Tracked, logits, plen: int,
+                        clen: int) -> None:
+        """Final chunk committed: write the checkpoint pytree into the
+        shared slot cache, sample the first token from the last real
+        row's logits, and switch the slot to decoding."""
+        self._write_slot(i, tr.chunk_state, plen)
+        tr.chunk_state = None
+        tr.chunk_heads = None
+        tr.chunk_eff = None
+        tr.prefill_done = 0
+        first = int(jnp.argmax(logits[0, clen - 1, :self.cfg.vocab_size]))
+        tr.generated.append(first)
+        self.pos[i] = plen
+        self._last_tok[i] = first
+        if self._done(tr):
+            self._release(i)
+
+    def _chunk_fault(self, i: int, tr: _Tracked, e: Exception) -> None:
+        """A chunk execution faulted: free the slot and requeue the
+        request *keeping its checkpoint* — recovery resumes from the last
+        committed chunk, not token zero.  Past ``max_retries`` the
+        request fails terminally (checkpoint dropped)."""
+        self._slots[i] = None
+        self.pos[i] = 0
+        self._last_tok[i] = 0
+        tr.retries += 1
+        self.chunk_log.append(ChunkEvent(
+            step=self.steps, rid=tr.rid, committed=tr.prefill_done,
+            error=f"{type(e).__name__}: {e}"))
+        if tr.retries > self.max_retries:
+            tr.chunk_state = None
+            tr.chunk_heads = None
+            tr.chunk_eff = None
+            self._terminal(tr, failed=True)
+        else:
+            self._retry.append(tr)
 
     def _done(self, tr: _Tracked) -> bool:
         if len(tr.generated) >= tr.request.max_new_tokens:
@@ -530,11 +785,13 @@ class ContinuousServeEngine:
             st["extra"] = extra
         self.states = st
 
-    def _fresh_states(self, heads) -> dict:
+    def _fresh_states(self, heads, batch: Optional[int] = None) -> dict:
         """A fresh (empty) decode pytree shaped for realized ``heads`` —
         canonical shapes re-sliced through the swapper, no fault hook in
-        the path (recovery must not be injectable)."""
-        st = tfm.init_decode_state(self.cfg, self.slots, self.max_len)
+        the path (recovery must not be injectable).  ``batch`` overrides
+        the slot count (chunk checkpoints are batch-1 pytrees)."""
+        b = self.slots if batch is None else int(batch)
+        st = tfm.init_decode_state(self.cfg, b, self.max_len)
         if self.swapper is None or (heads == self._full_heads).all():
             return st
         hook, self.swapper.reshape_fault_hook = \
@@ -548,7 +805,9 @@ class ContinuousServeEngine:
     # boundary transactions
     # ------------------------------------------------------------------
     def _live_tokens(self) -> int:
-        live = int(sum(self.pos[i] for i, tr in enumerate(self._slots)
+        live = int(sum(self.pos[i] + (tr.prefill_done
+                                      if tr.chunk_state is not None else 0)
+                       for i, tr in enumerate(self._slots)
                        if tr is not None))
         return max(live, 1)
 
@@ -644,6 +903,16 @@ class ContinuousServeEngine:
             try:
                 self.states = self.swapper.reshape_states(
                     self.states, self._shape_heads, shape_to)
+                # Live chunk checkpoints cross the boundary with the
+                # shared cache (same transaction: a fault here aborts the
+                # whole crossing and the requeued checkpoints revalidate
+                # against whatever widths the engine recovers to).
+                for ctr in self._slots:
+                    if ctr is not None and ctr.chunk_state is not None:
+                        ctr.chunk_state = self.swapper.reshape_states(
+                            ctr.chunk_state, self._shape_heads, shape_to)
+                        ctr.chunk_heads = np.asarray(shape_to).copy()
+                        ctr.chunk_eff = heads_to.copy()
                 requeued = 0
                 outcome = "ok"
             except Exception as e:  # noqa: BLE001 — the guard IS the point
@@ -690,8 +959,19 @@ class ContinuousServeEngine:
         if self.steps % self.boundary_every == 0:
             self._maybe_cross_boundary()
         prefill_tokens = self._join_waiting()
-        active = [i for i, tr in enumerate(self._slots) if tr is not None]
-        if not active and prefill_tokens == 0:
+        chunk_tokens = 0
+        if self.prefill_chunk is not None:
+            # Chunk budget: whatever the step token budget leaves after
+            # one decode token per decoding slot.  Budget-less engines
+            # run every prefilling slot one chunk per step.
+            n_decoding = sum(tr is not None and tr.chunk_state is None
+                             for tr in self._slots)
+            cbudget = None if self.step_token_budget is None \
+                else max(self.step_token_budget - n_decoding, 0)
+            chunk_tokens = self._advance_prefills(cbudget)
+        active = [i for i, tr in enumerate(self._slots)
+                  if tr is not None and tr.chunk_state is None]
+        if not active and prefill_tokens == 0 and chunk_tokens == 0:
             if not (self._queue or self._retry) and self._pending:
                 # idle until the next arrival: fast-forward a virtual
                 # clock; a wall clock delivers immediately (open-loop
@@ -729,7 +1009,7 @@ class ContinuousServeEngine:
             self._decode_steps += 1
 
         # time accounting: modeled (virtual clock) or measured
-        step_tokens = decoded + prefill_tokens
+        step_tokens = decoded + prefill_tokens + chunk_tokens
         if self.batch_cost_fn is not None and step_tokens:
             dt = self.batch_cost_fn(self._plan_active, step_tokens)
             advance = getattr(self.clock, "advance", None)
@@ -798,6 +1078,13 @@ class ContinuousServeEngine:
             self._terminal(tr, shed=True)
         self._pending.clear()
         self._queue.clear()
+        if not self._retry and all(tr is None for tr in self._slots):
+            # Nothing in flight (including the zero-submission case):
+            # return the — possibly empty — ledger without stepping the
+            # engine at all.
+            led = self.ledger()
+            assert led.complete, f"drain ledger does not sum: {led}"
+            return led
         steps = 0
         while self._retry or any(tr is not None for tr in self._slots):
             steps += 1

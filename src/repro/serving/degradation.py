@@ -185,6 +185,14 @@ class DegradationController:
         self._hot = 0
         self._cool = 0
         self._batches = 0
+        # Level floors pinned from outside the hysteresis loop (request
+        # hedging runs backup executions on a lower rung regardless of
+        # the controller's own overload state).  Pins stack: the
+        # effective floor is the max of all active pins, and observe()
+        # keeps walking self.level underneath them, so releasing the
+        # last pin restores exactly the state the controller would have
+        # reached on its own.
+        self._pins: List[int] = []
 
     def observe(self, signal: float) -> int:
         """Feed one per-batch overload signal; returns the (possibly
@@ -215,8 +223,27 @@ class DegradationController:
                                         self._batches))
         return self.level
 
+    def pin_floor(self, level: int) -> None:
+        """Pin a minimum degradation level (clamped to the ladder).
+        While any pin is active, :meth:`select` serves from at least the
+        highest pinned rung — the width-variant hedging hook: a hedge
+        backup's replica is pinned to a narrower, faster rung for the
+        backup's lifetime.  Pins nest (LIFO with :meth:`release_floor`)."""
+        self._pins.append(max(0, min(int(level), len(self.ladder) - 1)))
+
+    def release_floor(self) -> None:
+        """Release the most recent :meth:`pin_floor` (no-op when none)."""
+        if self._pins:
+            self._pins.pop()
+
+    @property
+    def effective_level(self) -> int:
+        """The level :meth:`select` serves from: the controller's own
+        hysteresis level, raised to any pinned floor."""
+        return max([self.level] + self._pins)
+
     def select(self, tokens: int) -> WidthPlan:
         """The active rung's plan for a batch's token volume — the
         boundary-time lookup the engine performs in place of
         ``planner.select`` when degradation is enabled."""
-        return self.ladder.rung(self.level).plan_for(tokens)
+        return self.ladder.rung(self.effective_level).plan_for(tokens)

@@ -98,6 +98,10 @@ class Result:
     retries: int = 0                # boundary-failure requeues survived
     recovered: bool = False         # finished normally after >=1 requeue
     failed: bool = False            # terminal failure (retry budget spent)
+    cancelled: bool = False         # cancelled in flight (hedge loser)
+    hedged: bool = False            # served as a hedge pair (router-level)
+    won_by: str = ""                # "primary" | "backup" when hedged
+    migrations: int = 0             # replica failovers survived (router)
 
 
 def _shed_result() -> "Result":

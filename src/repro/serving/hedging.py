@@ -1,0 +1,101 @@
+"""Width-variant request hedging: tail latency bought with narrow width.
+
+Classic hedged requests (Dean & Barroso, "The Tail at Scale") send a
+duplicate of a slow request to a second server once the original has
+outlived a high quantile of the latency distribution, and take whichever
+copy finishes first.  The paper's width planner gives the idea a twist a
+plain replica cannot: the backup does not have to run the *same* model.
+Every :class:`~repro.serving.degradation.DegradationLadder` rung is a
+width plan with a *predicted* latency reduction, so the backup can run
+on a narrower, faster rung — pinned via
+``DegradationController.pin_floor`` for exactly the backup's lifetime —
+making the hedge cheaper than the primary and more likely to beat it.
+
+This module is pure policy — *when* to hedge and *at what rung*.  The
+mechanics (which replica, slot-exact cancellation of the losing leg,
+one-ledger-entry accounting of the pair) live in
+:class:`~repro.serving.router.ReplicaRouter`:
+
+  * the hedge delay comes from live planner telemetry
+    (``ServingWidthPlanner.observed_percentile``: the observed latency
+    quantile of the request's traffic class) with a fixed fallback
+    before any data exists;
+  * ``should_hedge`` gates on elapsed time, an outstanding-hedge cap
+    (hedging must never amplify an overload — the cap bounds the extra
+    load to a constant), and optionally on requests that carry
+    deadlines at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.engine import Request, ServingWidthPlanner
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgeEvent:
+    """One hedge launch, in ``ReplicaRouter.hedge_log``."""
+
+    lid: int                  # logical request id (router-level)
+    launched_t: float         # router clock at backup launch
+    delay_s: float            # hedge delay that was exceeded
+    rung: int                 # degradation floor pinned for the backup
+    replica: str              # replica the backup landed on
+    winner: str = ""          # "primary" | "backup" (filled at resolve)
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """When to launch a backup, and how degraded it runs.
+
+    ``quantile`` — the per-class observed-latency percentile used as the
+    hedge delay (95 ⇒ at most ~5% of requests hedge, the classic
+    tail-only budget).  ``default_delay_s`` serves until the planner has
+    per-class data; ``min_delay_s`` floors the delay so a cold, fast
+    class cannot hedge everything.  ``rung`` is the ladder floor pinned
+    on the backup replica's controller (0 = same width: a plain Dean
+    -style hedge).  ``max_outstanding`` caps concurrent hedge pairs.
+    ``hedge_deadline_only`` restricts hedging to requests that carry a
+    deadline — the ones for which a tail latency is actually a miss.
+    """
+
+    quantile: float = 95.0
+    default_delay_s: float = 0.5
+    min_delay_s: float = 0.0
+    rung: int = 1
+    max_outstanding: int = 4
+    hedge_deadline_only: bool = False
+
+    def __post_init__(self):
+        if not 0.0 < self.quantile <= 100.0:
+            raise ValueError(f"quantile must be in (0, 100], "
+                             f"got {self.quantile}")
+        if self.rung < 0:
+            raise ValueError("rung must be >= 0")
+        if self.max_outstanding < 1:
+            raise ValueError("max_outstanding must be >= 1")
+
+    def hedge_delay(self, planner: Optional[ServingWidthPlanner],
+                    klass: str) -> float:
+        """Delay before a request becomes hedge-eligible: the observed
+        ``quantile`` of its class's finished-request latencies, else the
+        configured default while no telemetry exists."""
+        delay = None
+        if planner is not None:
+            delay = planner.observed_percentile(klass or "default",
+                                                self.quantile)
+        if delay is None:
+            delay = self.default_delay_s
+        return max(float(delay), self.min_delay_s)
+
+    def should_hedge(self, *, elapsed_s: float, delay_s: float,
+                     outstanding: int, request: Request) -> bool:
+        """Gate one candidate: old enough, under the concurrency cap,
+        and (optionally) deadline-carrying."""
+        if outstanding >= self.max_outstanding:
+            return False
+        if self.hedge_deadline_only and request.deadline_s is None:
+            return False
+        return elapsed_s >= delay_s

@@ -81,6 +81,70 @@ class TestInjectors:
         clk.advance(0.5)
         assert clk() == 10.5
 
+    def test_virtual_clock_rejects_negative_dt(self):
+        """A monotonic clock running backwards corrupts every latency
+        downstream — advance() fails loudly instead."""
+        clk = VirtualClock(1.0)
+        with pytest.raises(ValueError, match="negative dt"):
+            clk.advance(-0.1)
+        assert clk() == 1.0               # untouched by the failed call
+
+    def test_replica_stall_injector(self):
+        from repro.serving.chaos import ReplicaStallInjector
+
+        stall = ReplicaStallInjector(4.0, start_step=2, n_steps=2)
+        assert stall(0.1) == pytest.approx(0.1)       # step 0: outside
+        assert stall(0.1) == pytest.approx(0.1)       # step 1: outside
+        assert stall(0.1) == pytest.approx(0.4)       # steps 2-3: stalled
+        assert stall(0.1) == pytest.approx(0.4)
+        assert stall(0.1) == pytest.approx(0.1)       # window closed
+        assert stall.injected == 2
+        with pytest.raises(ValueError):
+            ReplicaStallInjector(0.5)                 # speedup, not stall
+
+    def test_replica_crash_injector(self):
+        from repro.serving.chaos import InjectedFault, ReplicaCrashInjector
+
+        crash = ReplicaCrashInjector(at_step=2)
+        assert crash(0.1) == pytest.approx(0.1)       # costed step 0
+        assert crash(0.1) == pytest.approx(0.1)       # costed step 1
+        with pytest.raises(InjectedFault, match="replica crash"):
+            crash(0.1)                                # costed step 2
+        assert crash.injected == 1
+        a = ReplicaCrashInjector(rate=0.3, seed=7)
+        b = ReplicaCrashInjector(rate=0.3, seed=7)
+
+        def trace(inj):
+            out = []
+            for _ in range(32):
+                try:
+                    inj(0.1)
+                    out.append(0)
+                except InjectedFault:
+                    out.append(1)
+            return out
+
+        ta, tb = trace(a), trace(b)
+        assert ta == tb and sum(ta) > 0
+
+    def test_chunk_fault_injector_seeded(self):
+        from repro.serving.chaos import ChunkFaultInjector, InjectedFault
+
+        def trace(seed):
+            inj = ChunkFaultInjector(0.25, seed=seed)
+            out = []
+            for _ in range(64):
+                try:
+                    inj()
+                    out.append(0)
+                except InjectedFault:
+                    out.append(1)
+            return out
+
+        assert trace(3) == trace(3)
+        assert sum(trace(3)) > 0
+        assert trace(3) != trace(4)
+
     def test_modeled_batch_cost_uses_plan_ratio(self):
         from repro.serving import WidthPlan
 

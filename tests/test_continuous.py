@@ -20,7 +20,7 @@ from repro.models import init_params
 from repro.models import transformer as tfm
 from repro.serving import (
     AdmissionControl, Arrival, ContinuousServeEngine,
-    DegradationController, DegradationLadder, Request, ServeEngine,
+    DegradationController, DegradationLadder, Ledger, Request, ServeEngine,
     ServingWidthPlanner, TrafficClass, WidthPlan, WidthSwapper,
     WidthVariantCompileCache, serving_templates,
 )
@@ -398,6 +398,25 @@ class TestOpenLoopLoad:
         assert all(a.t == 0.5 for a in arrivals if a.klass == "spike")
         assert all(0 < a.t < 2.0 for a in arrivals)
 
+    def test_burst_outside_window_rejected(self):
+        """A burst past its load's duration silently extended the run —
+        now a loud schedule error."""
+        bad = [TrafficLoad("late", rate_rps=1.0, duration_s=1.0,
+                           burst_at=1.5, burst_n=4)]
+        with pytest.raises(ValueError, match="outside its"):
+            open_loop_arrivals(bad, 256, seed=0)
+
+    def test_overlapping_spike_schedules_rejected(self):
+        """Two classes spiking at the same instant interleave by list
+        order, not by seed — refused so determinism can't silently
+        depend on load declaration order."""
+        bad = [TrafficLoad("a", rate_rps=0.0, duration_s=2.0,
+                           burst_at=0.5, burst_n=8),
+               TrafficLoad("b", rate_rps=0.0, duration_s=2.0,
+                           burst_at=0.5, burst_n=8)]
+        with pytest.raises(ValueError, match="overlapping spike"):
+            open_loop_arrivals(bad, 256, seed=0)
+
     def test_tail_report_percentiles(self):
         from repro.serving import Result
 
@@ -676,3 +695,129 @@ class TestPrefillBucketing:
         with pytest.raises(ValueError, match="prefill_bucketing"):
             ContinuousServeEngine(local_params, local_cfg, max_len=48,
                                   prefill_bucketing=True)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: interleaving, checkpoints, recovery
+# ---------------------------------------------------------------------------
+class _OneShotChunkFault:
+    """Raise InjectedFault on exactly the n-th chunk execution."""
+
+    def __init__(self, at):
+        self.at = int(at)
+        self.calls = 0
+        self.injected = 0
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls == self.at:
+            self.injected += 1
+            raise InjectedFault(f"injected chunk fault at call {self.at}")
+
+
+@pytest.mark.slow
+class TestChunkedPrefill:
+    LENS = (5, 13, 27, 3, 21)
+
+    def _run(self, cfg, params, *, chunk, budget=None, hook=None,
+             max_retries=2):
+        eng = ContinuousServeEngine(
+            params, cfg, max_len=64, batch_slots=2, prefill_chunk=chunk,
+            step_token_budget=budget, chunk_fault_hook=hook,
+            max_retries=max_retries)
+        results = eng.run(reqs_for(cfg, self.LENS, max_new=8))
+        return eng, results
+
+    def test_chunked_tokens_match_whole_prefill(self, setup):
+        """Chunk-at-a-time prefill against the growing cache is exact
+        for greedy decoding: every request's tokens match the
+        whole-prompt prefill engine's, and the chunk count is exactly
+        sum(ceil(plen / chunk))."""
+        cfg, params = setup
+        _, plain = self._run(cfg, params, chunk=None)
+        eng, chunked = self._run(cfg, params, chunk=4, budget=8)
+        for a, b in zip(plain, chunked):
+            assert np.array_equal(a.tokens, b.tokens)
+        assert eng.chunk_steps == sum(-(-l // 4) for l in self.LENS)
+        assert eng.ledger().complete
+
+    def test_chunk_fault_resumes_from_checkpoint(self, setup):
+        """A fault mid-prefill requeues at the last committed chunk, not
+        token zero: the total successful chunk count stays exactly
+        sum(ceil(plen / chunk)) — no chunk re-executed — and the request
+        finishes with identical tokens, marked recovered."""
+        cfg, params = setup
+        _, plain = self._run(cfg, params, chunk=None)
+        hook = _OneShotChunkFault(4)      # mid-prefill of an early prompt
+        eng, results = self._run(cfg, params, chunk=4, hook=hook)
+        assert hook.injected == 1
+        assert eng.chunk_log and eng.chunk_log[0].committed > 0
+        assert eng.chunk_steps == sum(-(-l // 4) for l in self.LENS)
+        for a, b in zip(plain, results):
+            assert np.array_equal(a.tokens, b.tokens)
+        assert sum(r.recovered for r in results) == 1
+        assert eng.ledger().complete and eng.ledger().failed == 0
+
+    def test_chunk_retry_budget_exhaustion_fails_loudly(self, setup):
+        """Every chunk faulting forever: the request fails terminally
+        after max_retries, accounted in the ledger — never a hang."""
+        cfg, params = setup
+
+        def always():
+            raise InjectedFault("permanent chunk fault")
+
+        eng = ContinuousServeEngine(
+            params, cfg, max_len=64, batch_slots=2, prefill_chunk=4,
+            chunk_fault_hook=always, max_retries=1)
+        results = eng.run(reqs_for(cfg, (9,), max_new=4))
+        assert results[0].failed and results[0].retries == 2
+        led = eng.ledger()
+        assert led.complete and led.failed == 1
+
+    def test_chunk_on_ineligible_config_raises(self, setup):
+        cfg, params = setup
+        local_cfg = dataclasses.replace(cfg, block_pattern=("local",),
+                                        window=8)
+        local_params = init_params(jax.random.PRNGKey(0), local_cfg)
+        with pytest.raises(ValueError, match="chunked prefill"):
+            ContinuousServeEngine(local_params, local_cfg, max_len=48,
+                                  prefill_chunk=4)
+
+    def test_chunk_shapes_are_bounded_with_cache(self, setup):
+        """With a compile cache the chunk executable shape set is the
+        chunk plus pow2 tail buckets — bounded, AOT-warmable."""
+        cfg, params = setup
+        cache = WidthVariantCompileCache(cfg)
+        eng = ContinuousServeEngine(
+            params, cfg, max_len=64, batch_slots=2, prefill_chunk=8,
+            compile_cache=cache)
+        eng.warm_compile([], prefill_lengths=self.LENS)
+        traced_before = cache.tracer.count
+        results = eng.run(reqs_for(cfg, self.LENS, max_new=4))
+        assert eng.ledger().complete
+        # decode is the only trace the serve loop should add on top of
+        # the warmed chunk executables
+        assert cache.tracer.count - traced_before <= 1
+        assert all(len(r.tokens) == 4 for r in results)
+
+
+class TestDrainFastPath:
+    def test_drain_on_zero_submitted_engine(self, setup):
+        """drain() before any submission returns the empty-but-complete
+        ledger without stepping the engine at all — pinned (the guard
+        keeps the zero-work drain from ever touching the model)."""
+        cfg, params = setup
+        eng = ContinuousServeEngine(params, cfg, max_len=32)
+        led = eng.drain()
+        assert led == Ledger(submitted=0, finished=0, shed=0, failed=0,
+                             in_flight=0, queued=0, evicted=0)
+        assert led.complete and eng.steps == 0
+
+    def test_drain_after_completion_is_also_stepless(self, setup):
+        cfg, params = setup
+        eng = ContinuousServeEngine(params, cfg, max_len=32)
+        eng.run(reqs_for(cfg, (4,), max_new=2))
+        steps = eng.steps
+        led = eng.drain()
+        assert led.complete and led.finished == 1
+        assert eng.steps == steps

@@ -1,0 +1,376 @@
+"""Hedged multi-replica serving: chunked prefill under fire, width
+-variant hedging, health-aware routing and zero-loss failover.
+
+Every scenario runs the real reduced model on per-replica virtual
+clocks with seeded injectors, so assertions are exact — ledger sums,
+who migrated, who won each hedge pair, run-twice trace equality — not
+statistics.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_params
+from repro.serving import (
+    Arrival, ContinuousServeEngine, HedgePolicy, ReplicaRouter, Request,
+    ServingWidthPlanner, WidthVariantCompileCache,
+)
+from repro.serving.chaos import (
+    ChunkFaultInjector, InjectedFault, ReplicaCrashInjector,
+    ReplicaStallInjector, VirtualClock, modeled_batch_cost,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"), d_model=128,
+                         n_layers=2, d_ff=576)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def arrivals_for(cfg, n, *, gap_s=0.002, plen=9, max_new=6, seed=1,
+                 klass="small"):
+    rng = np.random.default_rng(seed)
+    return [Arrival(t=gap_s * i,
+                    request=Request(
+                        prompt=rng.integers(1, cfg.vocab_size, size=(plen,))
+                        .astype(np.int32), max_new_tokens=max_new),
+                    klass=klass)
+            for i in range(n)]
+
+
+def make_replica(cfg, params, *, slow=None, chunk_hook=None, cache=None,
+                 slots=2, per_token_s=1e-4, overhead_s=1e-4):
+    """One engine on its own VirtualClock with chunked prefill — the
+    unit the router federates.  A shared compile cache keeps the fleet
+    on one executable table (and one trace count)."""
+    return ContinuousServeEngine(
+        params, cfg, max_len=64, batch_slots=slots, clock=VirtualClock(),
+        prefill_chunk=4, step_token_budget=8, chunk_fault_hook=chunk_hook,
+        compile_cache=cache,
+        batch_cost_fn=modeled_batch_cost(per_token_s, overhead_s=overhead_s,
+                                         slow=slow))
+
+
+def signature(results):
+    return [(r.tokens.tolist(), round(r.latency_s, 12), r.shed, r.failed,
+             r.hedged, r.won_by, r.migrations) for r in results]
+
+
+# ---------------------------------------------------------------------------
+# slot-exact cancellation (the hedge loser's contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestCancel:
+    def test_cancel_is_slot_exact(self, setup):
+        """Cancelling one in-flight request frees only its slot: the
+        neighbour decodes exactly the tokens it decodes in a run where
+        no cancel ever happens."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        keep = Request(prompt=rng.integers(1, cfg.vocab_size, size=(7,))
+                       .astype(np.int32), max_new_tokens=8)
+        victim = Request(prompt=rng.integers(1, cfg.vocab_size, size=(9,))
+                         .astype(np.int32), max_new_tokens=8)
+
+        solo = make_replica(cfg, params)
+        r_solo = solo.submit(keep)
+        while solo._outstanding():
+            solo.step()
+        want = solo.result(r_solo).tokens.tolist()
+
+        eng = make_replica(cfg, params)
+        r_keep = eng.submit(keep)
+        r_victim = eng.submit(victim)
+        for _ in range(4):
+            eng.step()
+        assert eng.cancel(r_victim) is True
+        assert eng.cancel(r_victim) is False      # already terminal
+        assert eng.cancel(10_000) is False        # unknown rid
+        while eng._outstanding():
+            eng.step()
+        res_v = eng.result(r_victim)
+        assert res_v.cancelled and res_v.shed and not res_v.deadline_missed
+        assert eng.result(r_keep).tokens.tolist() == want
+        led = eng.ledger()
+        assert led.complete and led.finished == 1 and led.shed == 1
+
+    def test_cancel_queued_request(self, setup):
+        cfg, params = setup
+        eng = make_replica(cfg, params, slots=2)
+        rids = [eng.submit(a.request)
+                for a in arrivals_for(cfg, 4, gap_s=0.0)]
+        eng.step()                                # seats the first two
+        assert eng.cancel(rids[-1]) is True       # still queued
+        while eng._outstanding():
+            eng.step()
+        assert eng.result(rids[-1]).cancelled
+        assert eng.ledger().complete
+
+
+# ---------------------------------------------------------------------------
+# hedge pairs: one logical request, exact accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.chaos
+class TestHedging:
+    def _hedged_run(self, cfg, params, *, stall_factor=8.0, n=10):
+        cache = WidthVariantCompileCache(cfg)
+        stall = ReplicaStallInjector(stall_factor)
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params, slow=stall, cache=cache),
+             "r1": make_replica(cfg, params, cache=cache)},
+            hedge=HedgePolicy(default_delay_s=0.01, rung=0),
+            slow_factor=None)         # isolate hedging from health drain
+        results = router.run(arrivals_for(cfg, n))
+        return router, results
+
+    def test_hedge_pair_is_one_ledger_entry(self, setup):
+        """Router ledger counts logicals (submitted == finished + shed +
+        failed with hedge pairs in flight), every engine's own ledger
+        stays complete, and the losing leg is a cancelled shed on its
+        engine — accounted exactly once at each level."""
+        cfg, params = setup
+        router, results = self._hedged_run(cfg, params)
+        led = router.ledger()
+        assert led.complete
+        assert led.submitted == len(results) == 10
+        assert led.finished + led.shed + led.failed == led.submitted
+        assert led.hedged >= 1
+        for r in router.replicas:
+            el = r.engine.ledger()
+            assert el.complete, el
+        cancelled = sum(
+            res.cancelled for r in router.replicas
+            for res in r.engine._results.values())
+        launched = len(router.hedge_log)
+        resolved_cancels = sum(1 for lg in router._logicals
+                               if lg.hedged and len(lg.results) < 2)
+        assert cancelled == resolved_cancels
+        assert led.hedged == launched
+
+    def test_backup_wins_on_stalled_primary(self, setup):
+        """With the primary replica stalled 8x, every hedged request is
+        won by the backup leg and carries won_by='backup'."""
+        cfg, params = setup
+        router, results = self._hedged_run(cfg, params)
+        hedged = [r for r in results if r.hedged]
+        assert hedged
+        assert all(r.won_by in ("primary", "backup") for r in hedged)
+        assert router.ledger().hedge_wins_backup >= 1
+        assert all(not r.hedged or r.won_by for r in results)
+
+    def test_both_legs_fault_resolves_failed_not_lost(self, setup):
+        """Every chunk on every replica faults: both legs of the pair
+        fail terminally and the logical request resolves failed — the
+        ledger still sums, nothing hangs or disappears."""
+        cfg, params = setup
+
+        def always():
+            raise InjectedFault("permanent chunk fault")
+
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params, chunk_hook=always),
+             "r1": make_replica(cfg, params, chunk_hook=always)},
+            hedge=HedgePolicy(default_delay_s=0.0, rung=0),
+            slow_factor=None, max_migrations=0)
+        results = router.run(arrivals_for(cfg, 3))
+        led = router.ledger()
+        assert led.complete and led.failed == 3, led
+        assert all(r.failed and not r.shed for r in results)
+
+    def test_hedge_rung_pins_and_releases_degrader(self, setup):
+        """A rung>0 hedge pins the backup replica's degradation floor
+        for the backup's lifetime and releases it at resolution — pins
+        are balanced after the run."""
+        cfg, params = setup
+        from repro.core import TPU_V5E as HW
+        from repro.serving import (
+            DegradationController, DegradationLadder, TrafficClass,
+            serving_templates,
+        )
+        templates, modules = serving_templates(cfg, HW, tokens=96,
+                                               sites=("mlp",))
+        planner = ServingWidthPlanner(HW, templates, modules=modules)
+        traffic = [TrafficClass("small", 96)]
+        planner.plan(traffic)
+        ladder = DegradationLadder.build(planner, traffic,
+                                         deltas=(0.8, 0.6))
+        from repro.serving import AdmissionControl, WidthSwapper
+        degraders = []
+
+        def replica(stall=None):
+            adm = AdmissionControl(max_queue_batches=8,
+                                   target_batch_s=1.0)
+            deg = DegradationController(ladder, down_patience=10 ** 6,
+                                        up_patience=10 ** 6)
+            degraders.append(deg)
+            return ContinuousServeEngine(
+                params, cfg, max_len=64, batch_slots=2,
+                clock=VirtualClock(), prefill_chunk=4,
+                swapper=WidthSwapper(params, cfg), admission=adm,
+                degrader=deg,
+                batch_cost_fn=modeled_batch_cost(1e-4, overhead_s=1e-4,
+                                                 slow=stall))
+
+        router = ReplicaRouter(
+            {"r0": replica(ReplicaStallInjector(8.0)), "r1": replica()},
+            hedge=HedgePolicy(default_delay_s=0.01, rung=1),
+            slow_factor=None)
+        router.run(arrivals_for(cfg, 8))
+        led = router.ledger()
+        assert led.complete and led.hedged >= 1
+        assert all(ev.rung == 1 for ev in router.hedge_log)
+        for deg in degraders:
+            assert deg._pins == [], "hedge pin leaked past resolution"
+
+
+# ---------------------------------------------------------------------------
+# health-aware routing: drain, failover, zero loss
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.chaos
+class TestRouterFailover:
+    def test_crash_migrates_in_flight_zero_lost(self, setup):
+        """Replica 0 dies mid-run: its in-flight requests are adopted by
+        replica 1 with generated tokens intact; every logical request
+        finishes and the crash is in the health log."""
+        cfg, params = setup
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params,
+                                slow=ReplicaCrashInjector(at_step=2)),
+             "r1": make_replica(cfg, params)},
+            slow_factor=None)
+        arrs = arrivals_for(cfg, 12, gap_s=0.001, max_new=10)
+        results = router.run(arrs)
+        led = router.ledger()
+        assert led.complete and led.finished == 12 and led.failed == 0
+        assert led.migrated >= 1
+        assert [h.state for h in router.health_log] == ["dead"]
+        assert any(r.migrations > 0 for r in results)
+        dead = router.replicas[0].engine.ledger()
+        assert dead.complete and dead.evicted >= 1
+
+    def test_slow_replica_drained_by_ewma(self, setup):
+        """A 20x straggler trips the EWMA health check: marked slow,
+        drained, its work rehomed — and the fleet finishes everything."""
+        cfg, params = setup
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params,
+                                slow=ReplicaStallInjector(20.0)),
+             "r1": make_replica(cfg, params)},
+            slow_factor=4.0, min_beats=4)
+        results = router.run(arrivals_for(cfg, 16, gap_s=0.001,
+                                          max_new=12))
+        led = router.ledger()
+        assert led.complete and led.finished == 16
+        assert led.migrated >= 1
+        assert [h.state for h in router.health_log] == ["slow"]
+        assert "ewma" in router.health_log[0].reason
+
+    def test_migration_budget_exhaustion_fails_accountably(self, setup):
+        """Every replica crashing: once a request is out of migrations
+        (or out of fleet) it fails terminally with a Result — the run
+        ends, the ledger sums, nothing is silently dropped."""
+        cfg, params = setup
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params,
+                                slow=ReplicaCrashInjector(at_step=2)),
+             "r1": make_replica(cfg, params,
+                                slow=ReplicaCrashInjector(at_step=4))},
+            slow_factor=None, max_migrations=1)
+        results = router.run(arrivals_for(cfg, 8, gap_s=0.001,
+                                          max_new=10))
+        led = router.ledger()
+        assert led.complete
+        assert led.failed >= 1
+        assert led.finished + led.failed + led.shed == 8
+        assert all(r is not None for r in results)
+
+    def test_chunk_checkpoint_survives_migration(self, setup):
+        """A replica dying mid-prefill hands its chunk checkpoint to the
+        adopting replica; the request still decodes the exact tokens of
+        an undisturbed run (head vectors match, so the checkpoint
+        resumes instead of restarting)."""
+        cfg, params = setup
+        arrs = arrivals_for(cfg, 4, gap_s=0.0005, plen=21, max_new=6)
+        baseline = ReplicaRouter(
+            {"r0": make_replica(cfg, params),
+             "r1": make_replica(cfg, params)},
+            slow_factor=None).run([Arrival(a.t, a.request, a.klass)
+                                   for a in arrs])
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params,
+                                slow=ReplicaCrashInjector(at_step=1)),
+             "r1": make_replica(cfg, params)},
+            slow_factor=None)
+        results = router.run(arrs)
+        assert router.ledger().complete
+        for want, got in zip(baseline, results):
+            assert want.tokens.tolist() == got.tokens.tolist()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: stalled replica + mid-prefill faults, hedged beats unhedged
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.chaos
+class TestHedgedAcceptance:
+    N = 24
+
+    def _run(self, cfg, params, *, hedge):
+        """Straggler burst: replica 0 stalls 8x from the start, chunk
+        prefills fault at a seeded rate on both replicas."""
+        cache = WidthVariantCompileCache(cfg)
+        router = ReplicaRouter(
+            {"r0": make_replica(cfg, params,
+                                slow=ReplicaStallInjector(8.0),
+                                chunk_hook=ChunkFaultInjector(0.05,
+                                                              seed=11),
+                                cache=cache),
+             "r1": make_replica(cfg, params,
+                                chunk_hook=ChunkFaultInjector(0.05,
+                                                              seed=12),
+                                cache=cache)},
+            hedge=(HedgePolicy(default_delay_s=0.01, rung=0)
+                   if hedge else None),
+            slow_factor=None)
+        results = router.run(arrivals_for(cfg, self.N, gap_s=0.001,
+                                          plen=13, max_new=8))
+        return router, results
+
+    @pytest.fixture(scope="class")
+    def runs(self, setup):
+        cfg, params = setup
+        unhedged = self._run(cfg, params, hedge=False)
+        hedged = self._run(cfg, params, hedge=True)
+        return unhedged, hedged
+
+    def test_zero_lost_under_chaos(self, runs):
+        (r_un, un), (r_h, h) = runs
+        for router, results in ((r_un, un), (r_h, h)):
+            led = router.ledger()
+            assert led.complete and led.submitted == self.N
+            assert led.failed == 0 and led.shed == 0, led
+            assert all(len(r.tokens) == 8 for r in results)
+        # the chaos actually fired: chunk faults recovered from
+        assert any(len(r.engine.chunk_log) > 0 for r in r_h.replicas)
+
+    def test_hedged_p999_beats_unhedged(self, runs):
+        (_, un), (r_h, h) = runs
+        p_un = float(np.percentile([r.latency_s for r in un], 99.9))
+        p_h = float(np.percentile([r.latency_s for r in h], 99.9))
+        assert r_h.ledger().hedged >= 1
+        assert p_h < p_un, (p_h, p_un)
+
+    def test_run_twice_is_identical(self, setup, runs):
+        cfg, params = setup
+        (_, un), (_, h) = runs
+        assert signature(self._run(cfg, params, hedge=False)[1]) \
+            == signature(un)
+        assert signature(self._run(cfg, params, hedge=True)[1]) \
+            == signature(h)
